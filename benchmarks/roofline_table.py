@@ -1,0 +1,62 @@
+"""§Roofline table: read results/dryrun/*.json and print per-cell terms.
+
+Columns:
+  arch, shape, mesh, status, microbatches,
+  compute_s, memory_s, collective_s, bottleneck,
+  model_tflops (global), hlo_tflops (global), useful_ratio,
+  roofline_fraction, peak_gib_per_dev
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh_tag: str = "pod"):
+    cells = []
+    for p in sorted(RESULTS.glob(f"*__{mesh_tag}.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def row(rec: dict) -> str:
+    a, s = rec["arch"], rec["shape"]
+    tag = "multipod" if rec.get("multi_pod") else "pod"
+    if rec.get("status") == "skipped":
+        return f"roofline,{a},{s},{tag},skipped,,,,,,,,,"
+    if rec.get("status") != "ok":
+        return f"roofline,{a},{s},{tag},ERROR,,,,,,,,,"
+    r = rec["roofline"]
+    m = rec["memory_analysis"]
+    return (
+        f"roofline,{a},{s},{tag},ok,{rec.get('microbatches', '')},"
+        f"{r['compute_s']:.4g},{r['memory_s']:.4g},{r['collective_s']:.4g},"
+        f"{r['bottleneck']},{r['model_flops_global']/1e12:.4g},"
+        f"{r['hlo_flops_global']/1e12:.4g},{r['useful_ratio']:.3f},"
+        f"{r['roofline_fraction']:.3f},{m['peak_estimate_gib']:.2f}"
+    )
+
+
+def main():
+    print(
+        "# roofline,arch,shape,mesh,status,microbatches,compute_s,memory_s,"
+        "collective_s,bottleneck,model_tflops,hlo_tflops,useful_ratio,"
+        "roofline_fraction,peak_gib_per_dev"
+    )
+    if not RESULTS.exists():
+        print("# no dry-run results found — run python -m repro.launch.dryrun")
+        return []
+    rows = []
+    for tag in ("pod", "multipod"):
+        for rec in load_cells(tag):
+            line = row(rec)
+            rows.append(line)
+            print(line)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

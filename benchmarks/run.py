@@ -1,0 +1,42 @@
+"""Benchmark runner: one section per paper table/figure + framework
+benchmarks.  ``python -m benchmarks.run [--fast]`` prints CSV rows.
+
+Sections:
+  fig5     — accuracy vs output-layer executions (paper Fig. 5)
+  table2   — silicon throughput/power model (paper Table II)
+  kern     — Pallas kernel microbench + TPU memory-roofline derivations
+  roofline — the 40-cell dry-run roofline table (§Roofline source)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig5,table2,kern,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    t0 = time.time()
+    from benchmarks import accuracy, kernels_bench, roofline_table, table2
+
+    if only is None or "table2" in only:
+        table2.main()
+    if only is None or "kern" in only:
+        kernels_bench.main(fast=args.fast)
+    if only is None or "roofline" in only:
+        roofline_table.main()
+    if only is None or "fig5" in only:
+        accuracy.main(fast=args.fast)
+    print(f"# benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

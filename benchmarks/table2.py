@@ -1,0 +1,56 @@
+"""Table II reproduction: throughput / power / efficiency of the silicon,
+derived from the bank-mapping cycle/energy model.
+
+Paper figures: 25 MHz, 0.8 mW, 560 K inf/s (MNIST MLP, 33 output passes),
+703 M inf/s/W, 184 TOPS/W-class efficiency.
+
+Output CSV: metric,model,value,paper_value
+"""
+
+from __future__ import annotations
+
+from repro.core import mapping
+from repro.core.device_model import (
+    CLOCK_HZ,
+    EnergyModel,
+    INFERENCES_PER_S_PER_W,
+    MNIST_INFERENCES_PER_S,
+    PICBNN_POWER_MW,
+)
+
+
+def analyze(name: str, sizes, n_passes: int = 33):
+    plans = [
+        mapping.plan_layer(sizes[i + 1], sizes[i], bias_cells=64)
+        for i in range(len(sizes) - 1)
+    ]
+    cost = mapping.model_inference_cost(plans, n_output_passes=n_passes)
+    e = EnergyModel()
+    rows = []
+    rows.append(("throughput_inf_per_s", name, cost.inferences_per_s,
+                 MNIST_INFERENCES_PER_S if name == "mnist" else ""))
+    rows.append(("energy_per_inference_nj", name, cost.energy_j * 1e9, ""))
+    rows.append(("inf_per_s_per_w", name, 1.0 / cost.energy_j,
+                 INFERENCES_PER_S_PER_W if name == "mnist" else ""))
+    rows.append(("cycles_per_inference", name, cost.cycles, ""))
+    rows.append(("binary_ops_per_inference", name, cost.binary_ops, ""))
+    ops_rate = cost.binary_ops / cost.latency_s
+    rows.append(("effective_tops", name, ops_rate / 1e12, ""))
+    rows.append(("tops_per_w", name,
+                 ops_rate / 1e12 / (PICBNN_POWER_MW * 1e-3), ""))
+    return rows
+
+
+def main():
+    print("# Table II reproduction: metric,model,value,paper_value")
+    rows = analyze("mnist", (784, 128, 10))
+    rows += analyze("hand-gesture", (4096, 128, 20))
+    for r in rows:
+        val = f"{r[2]:.6g}"
+        paper = f"{r[3]:.6g}" if r[3] != "" else ""
+        print(f"table2,{r[0]},{r[1]},{val},{paper}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Fault-tolerance demo (deliverable b, bonus example).
+
+Trains a small LM under the supervisor while injecting two simulated node
+failures and one straggler episode; shows checkpoint/restart recovery,
+straggler detection, and that the final loss trajectory matches a
+failure-free run (deterministic replay).
+
+Run:  PYTHONPATH=src python examples/ft_demo.py
+"""
+
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data.tokens import DataConfig, synthetic_stream
+from repro.ft import Supervisor, SupervisorConfig, failing_step, slow_step
+from repro.train import TrainConfig, init_train_state
+from repro.train.train_step import train_step
+import functools
+
+
+def main():
+    cfg = configs.get_config("llama3.2-1b+smoke")
+    tcfg = TrainConfig()
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+    )
+    step = jax.jit(functools.partial(train_step, cfg, tcfg))
+
+    def make_data(start):
+        dcfg = DataConfig(batch=4, seq_len=32, vocab_size=cfg.vocab_size)
+        it = synthetic_stream(dcfg)
+        for _ in range(start):
+            next(it)
+        return it
+
+    def run(step_fn, tag):
+        d = Path(tempfile.mkdtemp(prefix=f"ftdemo_{tag}_"))
+        alerts = []
+        sup = Supervisor(
+            SupervisorConfig(ckpt_dir=d, ckpt_every=10, backoff_s=0.0,
+                             straggler_z=3.0, straggler_patience=2),
+            step_fn, make_data, template,
+            on_straggler=lambda a: alerts.append(a),
+        )
+        final = sup.run(state, 40)
+        losses = [h["loss"] for h in sup.history]
+        shutil.rmtree(d, ignore_errors=True)
+        return final, losses, sup.restarts, alerts
+
+    print("=== failure-free reference run (40 steps) ===")
+    clean_final, clean_losses, _, _ = run(step, "clean")
+    print(f"final loss {clean_losses[-1]:.4f}")
+
+    print("\n=== faulted run: failures @ step 13 & 27, straggler @ 31-35 ===")
+    flaky = failing_step(step, fail_at=[13, 27])
+    flaky = slow_step(flaky, slow_at=range(31, 36), delay_s=0.8)
+    fault_final, fault_losses, restarts, alerts = run(flaky, "flaky")
+    print(f"final loss {fault_losses[-1]:.4f}  restarts={restarts}  "
+          f"straggler alerts={len(alerts)}")
+    for a in alerts[:2]:
+        print(f"  alert: step {a['step']} took {a['dt']:.2f}s "
+              f"(mean {a['mean']:.2f}s, z={a['z']:.1f})")
+
+    w_clean = np.asarray(
+        jax.tree_util.tree_leaves(clean_final["params"])[0]
+    )
+    w_fault = np.asarray(
+        jax.tree_util.tree_leaves(fault_final["params"])[0]
+    )
+    same = np.allclose(w_clean, w_fault, atol=1e-5)
+    print(f"\nfinal params identical to failure-free run: {same} "
+          f"(checkpoint/restart + deterministic replay)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""repro: PiC-BNN (Processing-in-CAM BNN accelerator) reproduced as a
+production-grade multi-pod JAX framework.
+
+Layers:
+  repro.core      -- the paper's contribution (binarization, CAM, ensemble)
+  repro.kernels   -- Pallas TPU kernels for the paper's compute hot spots
+  repro.models    -- LM substrate (dense / MoE / SSM / hybrid backbones)
+  repro.sharding  -- logical-axis -> mesh partitioning rules
+  repro.configs   -- assigned architectures + the paper's own models
+  repro.train     -- optimizer, train step, gradient compression
+  repro.serve     -- prefill/decode steps + batched serving engine
+  repro.data      -- data pipelines (synthetic + memmap token streams)
+  repro.checkpoint-- atomic/async checkpointing with elastic restore
+  repro.ft        -- fault tolerance: supervisor, straggler monitor
+  repro.launch    -- production mesh, multi-pod dry-run, roofline analysis
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+"""Atomic / async / elastic checkpointing."""
+
+from repro.checkpoint.ckpt import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    save,
+)

@@ -1,0 +1,132 @@
+"""Binarization primitives: sign with straight-through estimator, bit
+packing/unpacking, and Hamming-distance utilities.
+
+Conventions (match the paper, Sec. II-B):
+  logical bit b in {0, 1}  <->  value v = 2b - 1 in {-1, +1}
+  weight/activation "match" (XNOR == 1)  <->  product v_w * v_x = +1
+
+Packed representation: bits are packed little-endian into uint32 words along
+the last axis; `valid_len` tracks the logical (unpadded) bit length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+
+
+@jax.custom_vjp
+def sign_ste(x):
+    """sign(x) in {-1, +1} with the clipped straight-through estimator.
+
+    Forward: sign(x) (0 maps to +1, matching the paper's logic-'1' coding).
+    Backward: dL/dx = dL/dy * 1[|x| <= 1]  (Hinton STE / BinaryConnect).
+    """
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _sign_ste_fwd(x):
+    return sign_ste(x), x
+
+
+def _sign_ste_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+sign_ste.defvjp(_sign_ste_fwd, _sign_ste_bwd)
+
+
+def to_bits(values):
+    """±1 values (any float/int dtype) -> {0,1} uint8 bits."""
+    return (values > 0).astype(jnp.uint8)
+
+
+def from_bits(bits, dtype=jnp.float32):
+    """{0,1} bits -> ±1 values."""
+    return (2 * bits.astype(jnp.int8) - 1).astype(dtype)
+
+
+def packed_width(n_bits: int) -> int:
+    return -(-n_bits // WORD)
+
+
+def pack_bits(bits):
+    """Pack {0,1} bits along the last axis into uint32 words (little-endian).
+
+    Pads with 0 to a multiple of 32. Padding bits are 0 on both operands of a
+    Hamming distance, so XOR over padding contributes nothing.
+    """
+    *lead, k = bits.shape
+    kw = packed_width(k)
+    pad = kw * WORD - k
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * len(lead) + [(0, pad)])
+    bits = bits.reshape(*lead, kw, WORD).astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words, n_bits: int):
+    """uint32 words -> {0,1} uint8 bits, truncated to n_bits."""
+    *lead, kw = words.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*lead, kw * WORD)[..., :n_bits].astype(jnp.uint8)
+
+
+def pack_pm1(values):
+    """±1 values -> packed uint32 words."""
+    return pack_bits(to_bits(values))
+
+
+def hamming_packed(a, b):
+    """Hamming distance between packed bit vectors (broadcasts leading dims)."""
+    return jnp.bitwise_count(jnp.bitwise_xor(a, b)).astype(jnp.int32).sum(-1)
+
+
+def hamming_pm1(a, b):
+    """Hamming distance between ±1 vectors: #positions where they differ."""
+    return jnp.sum(a * b < 0, axis=-1).astype(jnp.int32)
+
+
+def dot_from_hd(hd, n_bits):
+    """XNOR-popcount 'dot product' from Hamming distance.
+
+    matches - mismatches = (n - hd) - hd = n - 2*hd  ==  <v_a, v_b> in ±1.
+    """
+    return n_bits - 2 * hd
+
+
+def hd_from_dot(dot, n_bits):
+    return (n_bits - dot) // 2
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def binary_matvec_packed(w_packed, x_packed, n_bits: int):
+    """y_j = sum_i XNOR(+/-)(W_ji, x_i) over packed rows.
+
+    w_packed: [N, Kw] uint32;  x_packed: [..., Kw] uint32.
+    Returns [..., N] int32 dot products in the ±1 domain.
+    """
+    hd = hamming_packed(x_packed[..., None, :], w_packed)
+    return dot_from_hd(hd, n_bits)
+
+
+def random_pm1(key, shape, dtype=jnp.float32):
+    return from_bits(jax.random.bernoulli(key, 0.5, shape), dtype)
+
+
+def np_pack_bits(bits: np.ndarray) -> np.ndarray:
+    """NumPy twin of pack_bits (for host-side dataset/CAM construction)."""
+    *lead, k = bits.shape
+    kw = packed_width(k)
+    pad = kw * WORD - k
+    if pad:
+        bits = np.pad(bits, [(0, 0)] * len(lead) + [(0, pad)])
+    bits = bits.reshape(*lead, kw, WORD).astype(np.uint64)
+    return (bits << np.arange(WORD, dtype=np.uint64)).sum(-1).astype(np.uint32)

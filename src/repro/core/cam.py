@@ -1,0 +1,220 @@
+"""Content-addressable memory (CAM) arrays with Hamming-distance-tolerant
+approximate search — the storage/compute substrate of PiC-BNN.
+
+A :class:`CAMArray` stores binary rows (bit-packed uint32 words).  A *search*
+asserts a binary query on the searchlines of every row simultaneously and
+returns, per row, a binary match decision: ``match <=> HD(row, query) <= T``
+where ``T`` is the Hamming-distance tolerance threshold set by the analog
+knobs (V_ref, V_eval, V_st; see core/device_model.py).
+
+Semantics notes (paper Sec. IV):
+  * per-bit match == XNOR == one binary multiplication;
+  * the matchline voltage at sampling time encodes POPCOUNT;
+  * the MLSA threshold implements the sign/majority nonlinearity;
+  * batch-norm constants are materialized as extra always-match /
+    always-mismatch cells appended to each row (``bias_cells``).
+
+Two execution paths:
+  * ``search`` / ``search_hd`` — pure-jnp reference semantics (the oracle);
+  * kernels/cam_search.py — the Pallas TPU kernel with identical semantics
+    (validated bit-exact in the noiseless limit by tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binarize
+from repro.core.device_model import (
+    BANK_CONFIGS,
+    AnalogParams,
+    NoiseModel,
+    NOISELESS,
+    default_params,
+    hd_threshold,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BankConfig:
+    """One logical configuration of the 128-kbit PiC-BNN macro."""
+
+    rows: int
+    width: int  # bits per row
+
+    def __post_init__(self):
+        total = self.rows * self.width
+        if total > 4 * 32 * 1024 * 8:  # > 128 kbit? (4 banks x 32 kbit)
+            # Logical configs larger than the macro are tiled by the mapper;
+            # the dataclass itself places no restriction.
+            pass
+
+    @property
+    def capacity_bits(self) -> int:
+        return self.rows * self.width
+
+
+# The three logical configurations of the fabricated macro (Sec. III).
+CONFIG_512x256 = BankConfig(512, 256)
+CONFIG_1024x128 = BankConfig(1024, 128)
+CONFIG_2048x64 = BankConfig(2048, 64)
+LOGICAL_CONFIGS: Sequence[BankConfig] = (
+    CONFIG_512x256,
+    CONFIG_1024x128,
+    CONFIG_2048x64,
+)
+
+
+def pick_bank_config(width_bits: int) -> BankConfig:
+    """Smallest logical row width that fits `width_bits` (else widest)."""
+    for cfg in sorted(LOGICAL_CONFIGS, key=lambda c: c.width):
+        if cfg.width >= width_bits:
+            return cfg
+    return max(LOGICAL_CONFIGS, key=lambda c: c.width)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CAMArray:
+    """A (logical) CAM array holding N binary rows of `n_bits` each.
+
+    rows_packed : [N, ceil(n_bits/32)] uint32 — stored data D
+    n_bits      : logical row width (excludes packing pad; pad bits are 0
+                  in both query and rows so they never mismatch)
+    """
+
+    rows_packed: jax.Array
+    n_bits: int
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.rows_packed,), (self.n_bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(rows_packed=children[0], n_bits=aux[0])
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_bits(cls, bits) -> "CAMArray":
+        """bits: [N, n_bits] in {0,1}."""
+        bits = jnp.asarray(bits)
+        return cls(rows_packed=binarize.pack_bits(bits), n_bits=bits.shape[-1])
+
+    @classmethod
+    def from_pm1(cls, values) -> "CAMArray":
+        """values: [N, n_bits] in {-1,+1}."""
+        return cls.from_bits(binarize.to_bits(jnp.asarray(values)))
+
+    @property
+    def n_rows(self) -> int:
+        return self.rows_packed.shape[0]
+
+    # -- search -------------------------------------------------------------
+    def search_hd(self, query_packed) -> jax.Array:
+        """Hamming distance of every row against query(s).
+
+        query_packed: [..., Kw] uint32 -> returns [..., N] int32.
+        (Silicon never exposes this quantity — it lives only on the ML as an
+        analog voltage — but it is the reference semantics all binary match
+        decisions derive from.)
+        """
+        return binarize.hamming_packed(
+            query_packed[..., None, :], self.rows_packed
+        )
+
+    def search(
+        self,
+        query_packed,
+        threshold,
+        *,
+        noise: NoiseModel = NOISELESS,
+        params: Optional[AnalogParams] = None,
+        key: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Approximate search: per-row binary match under HD tolerance.
+
+        threshold  — integer/float HD tolerance T (already derived from the
+                     analog knobs), scalar or broadcastable to [..., N].
+        noise/key  — optional PVT noise: perturbs the *effective* per-row
+                     threshold (see NoiseModel.effective_threshold).
+
+        Returns uint8 [..., N]: 1 where HD(row, query) <= T_eff.
+        """
+        hd = self.search_hd(query_packed)
+        t_eff = jnp.asarray(threshold, jnp.float32)
+        if key is not None and (
+            noise.sigma_hd or noise.sigma_vref or noise.sigma_tjitter
+        ):
+            jitter = noise.sigma_hd * jax.random.normal(key, hd.shape)
+            drift = noise.temp_drift_hd
+            t_eff = t_eff + jitter + drift
+        return (hd.astype(jnp.float32) <= t_eff).astype(jnp.uint8)
+
+    def search_knobs(
+        self,
+        query_packed,
+        v_ref,
+        v_eval,
+        v_st,
+        *,
+        params: Optional[AnalogParams] = None,
+        noise: NoiseModel = NOISELESS,
+        key: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Search with the threshold derived from the analog knob voltages."""
+        params = params or default_params()
+        if key is not None:
+            t = noise.effective_threshold(
+                key, params, v_ref, v_eval, v_st, shape=(self.n_rows,)
+            )
+        else:
+            t = hd_threshold(params, v_ref, v_eval, v_st)
+        return self.search(query_packed, t)
+
+
+def write_weights_with_bias(
+    weights_pm1: jax.Array | np.ndarray,
+    bias_counts: jax.Array | np.ndarray,
+    bias_cells: int,
+) -> CAMArray:
+    """Build a CAM array realizing `W x + C` rows (paper Eq. 4).
+
+    weights_pm1 : [N, K] in {-1,+1} — the binary weight rows W_j.
+    bias_counts : [N] integer C_j in [-bias_cells, +bias_cells] — the folded
+                  batch-norm constants.
+    bias_cells  : number of extra CAM cells appended per row.
+
+    Encoding of C_j with `bias_cells` extra cells (paper Sec. IV): the query
+    drives logic '1' on every bias searchline; a bias cell storing '1'
+    always matches (+1 contribution) and storing '0' always mismatches (-1).
+    With p cells at '1' and (bias_cells - p) at '0' the row's dot product
+    gains p - (bias_cells - p) = 2p - bias_cells, so p = (C_j+bias_cells)/2.
+    C_j and bias_cells must have equal parity for an exact representation;
+    we round C_j toward zero otherwise (1-LSB quantization, as in silicon
+    where the cell count is fixed at array-write time).
+    """
+    w = np.asarray(weights_pm1)
+    c = np.asarray(bias_counts).astype(np.int64)
+    n, _k = w.shape
+    c = np.clip(c, -bias_cells, bias_cells)
+    # parity fix: when (c + bias_cells) is odd, quantize c toward zero
+    odd = (c + bias_cells) % 2 != 0
+    c = np.where(odd, c - np.sign(c), c)
+    p = (c + bias_cells) // 2  # cells storing '1'
+    bias_bits = (np.arange(bias_cells)[None, :] < p[:, None]).astype(np.uint8)
+    w_bits = (w > 0).astype(np.uint8)
+    all_bits = np.concatenate([w_bits, bias_bits], axis=-1)
+    return CAMArray.from_bits(jnp.asarray(all_bits))
+
+
+def query_with_bias(x_pm1: jax.Array, bias_cells: int) -> jax.Array:
+    """Pack an activation query, appending the all-'1' bias drive bits."""
+    bits = binarize.to_bits(x_pm1)
+    ones = jnp.ones((*bits.shape[:-1], bias_cells), jnp.uint8)
+    return binarize.pack_bits(jnp.concatenate([bits, ones], axis=-1))

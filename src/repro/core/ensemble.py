@@ -1,0 +1,243 @@
+"""Algorithm 1 — the paper's core contribution.
+
+The output (fully connected) layer of a classification BNN is executed
+multiple times with a *varying Hamming-distance tolerance threshold* (swept
+through the analog knobs V_ref / V_eval / V_st).  Each pass produces one
+binary output per class ("does class j match the feature vector within
+HD <= T_t ?").  The final prediction is the per-class majority (vote count)
+over the passes.
+
+Why this works (law of large numbers, Sec. IV): with thresholds swept over
+{0, 2, ..., 64}, class j collects ``votes_j = #{t : HD_j <= T_t + noise}``.
+In the noiseless limit votes_j = #{t : T_t >= HD_j} is strictly monotone
+decreasing in HD_j, so argmax(votes) == argmin(HD) == argmax(full-precision
+logit) — the FP logit ranking is recovered from purely binary measurements.
+Under analog noise each vote is a Bernoulli trial with success probability
+sigmoid-like in (T_t - HD_j); summing over passes concentrates the estimate
+(LLN), which is what lets the silicon skip ADC/TDC readout entirely.
+
+Three execution modes:
+  faithful  — 33 sequential searches, per-pass PVT noise, per-pass knob
+              voltages from the behavioural device model (the silicon flow).
+  fused     — beyond-paper TPU optimization: HD is computed once per
+              (query, row) and compared against all T in-register; the vote
+              count is materialized directly.  Bit-exact equal to `faithful`
+              in the noiseless limit (tests assert this); ~33x fewer array
+              reads.
+  kernel    — the Pallas implementation of `fused` (kernels/cam_search.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binarize
+from repro.core.bnn import FoldedLayer
+from repro.core.cam import CAMArray, query_with_bias, write_weights_with_bias
+from repro.core.device_model import (
+    AnalogParams,
+    NoiseModel,
+    NOISELESS,
+    default_params,
+    knob_schedule,
+)
+
+# Algorithm 1 line 3: HD threshold sweep {0, 2, 4, ..., 64} -> 33 passes.
+PAPER_THRESHOLDS = tuple(range(0, 65, 2))
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleConfig:
+    thresholds: Sequence[int] = PAPER_THRESHOLDS
+    bias_cells: int = 64
+    noise: NoiseModel = NOISELESS
+    mode: str = "fused"  # faithful | fused | kernel
+
+    @property
+    def n_passes(self) -> int:
+        return len(self.thresholds)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CAMEnsembleHead:
+    """The deployed output layer: a CAM array + the threshold schedule.
+
+    cam        : rows = classes; row = [binary weights | bias cells(C_j)]
+    thresholds : int32 [n_passes] — HD tolerances swept by Algorithm 1.
+                 NOTE: silicon thresholds apply to the *biased* row of width
+                 n_in + bias_cells; a logical sweep {0,2,..,64} over logit
+                 space maps to HD space via T_hd = (n_total - T_logit... see
+                 `logit_sweep_to_hd`) — we store HD-space thresholds.
+    """
+
+    cam: CAMArray
+    thresholds: jax.Array
+    bias_cells: int
+
+    def tree_flatten(self):
+        return (self.cam, self.thresholds), (self.bias_cells,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(cam=children[0], thresholds=children[1], bias_cells=aux[0])
+
+    @property
+    def n_classes(self) -> int:
+        return self.cam.n_rows
+
+
+def build_head(
+    layer: FoldedLayer,
+    cfg: EnsembleConfig,
+) -> CAMEnsembleHead:
+    """Write the folded output layer into a CAM ensemble head.
+
+    Threshold-space note: Algorithm 1 sweeps HD tolerance {0, 2, ..., 64}.
+    For a row of n_in + bias_cells total bits, the *informative* HD range
+    (where class match decisions actually flip) is centered at the exact-
+    majority point n_total/2 (dot = n - 2*HD, majority <=> HD <= n/2).  A
+    raw absolute sweep {0..64} over a 192-bit row would never fire; we
+    therefore center the paper's sweep on the majority point:
+    ``T_t = n_total/2 - max(sweep)/2 + t`` — recovering exactly the paper's
+    33 equispaced tolerance levels straddling the decision boundary.  This
+    reading reproduces Fig. 5 (accuracy grows then saturates with pass
+    count) and is recorded as an assumption in DESIGN.md.
+    """
+    cam = write_weights_with_bias(layer.weights_pm1, layer.c, cfg.bias_cells)
+    n_total = layer.n_in + cfg.bias_cells
+    center = n_total // 2
+    sweep = np.asarray(cfg.thresholds, np.int64)
+    t_hd = center - sweep.max() // 2 + sweep
+    return CAMEnsembleHead(
+        cam=cam,
+        thresholds=jnp.asarray(t_hd, jnp.int32),
+        bias_cells=cfg.bias_cells,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Execution modes
+# ---------------------------------------------------------------------------
+def votes_faithful(
+    head: CAMEnsembleHead,
+    x_pm1: jax.Array,
+    *,
+    noise: NoiseModel = NOISELESS,
+    key: Optional[jax.Array] = None,
+    params: Optional[AnalogParams] = None,
+) -> jax.Array:
+    """The silicon flow: one search per threshold, per-pass PVT noise.
+
+    x_pm1: [..., n_in] +-1 activations. Returns int32 votes [..., classes].
+    """
+    q = query_with_bias(x_pm1, head.bias_cells)
+    hd = head.cam.search_hd(q)  # [..., classes] (the analog ML state)
+    n_passes = head.thresholds.shape[0]
+    if key is None:
+        keys = [None] * n_passes
+    else:
+        keys = list(jax.random.split(key, n_passes))
+
+    votes = jnp.zeros(hd.shape, jnp.int32)
+    for t in range(n_passes):
+        t_eff = head.thresholds[t].astype(jnp.float32)
+        if keys[t] is not None and (
+            noise.sigma_hd or noise.sigma_vref or noise.sigma_tjitter
+        ):
+            t_eff = t_eff + noise.sigma_hd * jax.random.normal(
+                keys[t], hd.shape
+            ) + noise.temp_drift_hd
+        votes = votes + (hd.astype(jnp.float32) <= t_eff).astype(jnp.int32)
+    return votes
+
+
+def votes_fused(head: CAMEnsembleHead, x_pm1: jax.Array) -> jax.Array:
+    """Beyond-paper fused sweep: HD once, all thresholds in-register.
+
+    Noiseless by construction (the TPU compare is exact); bit-identical to
+    votes_faithful(..., noise=NOISELESS).
+    """
+    q = query_with_bias(x_pm1, head.bias_cells)
+    hd = head.cam.search_hd(q)  # [..., C]
+    # votes_j = #{t : hd_j <= T_t}; thresholds sorted ascending ->
+    # votes = n_passes - searchsorted(T, hd)
+    t = head.thresholds
+    return (hd[..., None] <= t).sum(-1).astype(jnp.int32)
+
+
+def votes_kernel(head: CAMEnsembleHead, x_pm1: jax.Array) -> jax.Array:
+    """Pallas kernel path (interpret-mode on CPU). Same semantics as fused."""
+    from repro.kernels import ops  # local import: kernels are optional deps
+
+    q = query_with_bias(x_pm1, head.bias_cells)
+    return ops.cam_vote(q, head.cam.rows_packed, head.thresholds)
+
+
+def predict(
+    head: CAMEnsembleHead,
+    x_pm1: jax.Array,
+    cfg: EnsembleConfig,
+    *,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Algorithm 1 final prediction: per-class majority vote -> argmax."""
+    if cfg.mode == "faithful":
+        v = votes_faithful(head, x_pm1, noise=cfg.noise, key=key)
+    elif cfg.mode == "fused":
+        v = votes_fused(head, x_pm1)
+    elif cfg.mode == "kernel":
+        v = votes_kernel(head, x_pm1)
+    else:
+        raise ValueError(f"unknown ensemble mode {cfg.mode!r}")
+    return jnp.argmax(v, axis=-1)
+
+
+def topk_from_votes(votes: jax.Array, k: int) -> jax.Array:
+    """Top-k classes by vote count (ties broken by class index)."""
+    return jnp.argsort(-votes, axis=-1)[..., :k]
+
+
+def accuracy_sweep(
+    head: CAMEnsembleHead,
+    hidden_pm1: jax.Array,
+    labels: jax.Array,
+    cfg: EnsembleConfig,
+    *,
+    key: Optional[jax.Array] = None,
+    topk=(1, 2),
+) -> dict[int, dict[str, float]]:
+    """Fig. 5 reproduction: accuracy as a function of the pass count.
+
+    Evaluates Algorithm 1 truncated to the first p thresholds, for
+    p = 1..n_passes.  Returns {n_passes: {"top1": ..., "top2": ...}}.
+    """
+    q = query_with_bias(hidden_pm1, head.bias_cells)
+    hd = head.cam.search_hd(q).astype(jnp.float32)  # [B, C]
+    n_passes = head.thresholds.shape[0]
+    if key is not None and (cfg.noise.sigma_hd or cfg.noise.sigma_tjitter):
+        noise = cfg.noise.sigma_hd * jax.random.normal(
+            key, (n_passes,) + hd.shape
+        )
+    else:
+        noise = jnp.zeros((n_passes,) + hd.shape)
+    t_eff = head.thresholds.astype(jnp.float32)[:, None, None] + noise
+    per_pass = (hd[None] <= t_eff).astype(jnp.int32)  # [P, B, C]
+    cum = jnp.cumsum(per_pass, axis=0)  # votes after p passes
+    out = {}
+    labels = jnp.asarray(labels)
+    for p in range(1, n_passes + 1):
+        order = jnp.argsort(-cum[p - 1], axis=-1)
+        res = {}
+        for k in topk:
+            res[f"top{k}"] = float(
+                (order[:, :k] == labels[:, None]).any(-1).mean()
+            )
+        out[p] = res
+    return out

@@ -1,0 +1,11 @@
+"""Data pipelines: synthetic image datasets (paper eval), token streams
+(LM substrate), frontend-stub embedding streams (vlm/audio archs)."""
+
+from repro.data.synthetic import (  # noqa: F401
+    HG_LIKE,
+    MNIST_LIKE,
+    DatasetSpec,
+    binarize_images,
+    make_dataset,
+)
+from repro.data.tokens import DataConfig, memmap_stream, synthetic_stream  # noqa: F401

@@ -1,0 +1,6 @@
+"""Fault tolerance: supervisor (checkpoint/restart + straggler monitor),
+elastic resharding, failure injection for tests."""
+
+from repro.ft.supervisor import Supervisor, SupervisorConfig, StragglerMonitor  # noqa: F401
+from repro.ft.elastic import reshard_state, rescale_microbatches, state_shardings  # noqa: F401
+from repro.ft.failures import InjectedFailure, failing_step, slow_step  # noqa: F401

@@ -1,0 +1,71 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+Scenario: a pod (or host) is lost mid-run; the scheduler hands back a
+smaller (or later, larger) device set.  The supervisor rebuilds the mesh,
+recomputes shardings from the SAME logical rules, and either (a) restores
+the latest checkpoint against the new shardings (cold path, always works)
+or (b) reshards the live state with device_put (warm path, same process).
+
+Batch elasticity: the global batch is kept constant by rescaling the
+gradient-accumulation factor (microbatches) to the new data-parallel
+width — training math is unchanged across rescales (tests assert the loss
+trajectory is identical across a mid-run 2->1 pod rescale, modulo bf16).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.sharding import AxisRules
+from repro.sharding.rules import sanitize_spec
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, rules: AxisRules,
+                    state_template) -> dict:
+    """NamedSharding pytree for a {"params", "opt"} train state."""
+    rules = rules.resolve(mesh)
+    p_ps = M.param_pspecs(cfg, rules)
+
+    def named(ps_tree, tpl_tree):
+        return jax.tree_util.tree_map(
+            lambda spec, tpl: NamedSharding(
+                mesh, sanitize_spec(spec, tpl.shape, mesh)
+            ),
+            ps_tree,
+            tpl_tree,
+            is_leaf=lambda x: not isinstance(x, dict),
+        )
+
+    from jax.sharding import PartitionSpec as P
+
+    tpl = state_template
+    out = {"params": named(p_ps, tpl["params"])}
+    opt = {}
+    for k in tpl["opt"]:
+        if k == "step":
+            opt[k] = NamedSharding(mesh, P())
+        else:
+            opt[k] = named(p_ps, tpl["opt"][k])
+    out["opt"] = opt
+    return out
+
+
+def reshard_state(state, shardings):
+    """Warm-path reshard: device_put every leaf to its new sharding."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), state, shardings
+    )
+
+
+def rescale_microbatches(
+    global_batch: int, old_dp: int, new_dp: int, old_microbatches: int
+) -> int:
+    """Keep global batch + per-device microbatch memory constant."""
+    per_dev = global_batch // (old_dp * old_microbatches)
+    new_mb = max(1, global_batch // (new_dp * per_dev))
+    return new_mb

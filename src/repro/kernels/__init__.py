@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  binary_gemm — bit-packed XNOR-popcount GEMM (the CAM matchline array,
+                adapted to VPU popcount over uint32 words)
+  cam_search  — fused multi-threshold CAM vote (Algorithm 1 in one pass)
+  ops         — jit'd public wrappers (interpret-mode on CPU)
+  ref         — pure-jnp oracles used by the test suite
+
+Kernels are validated in interpret mode on CPU (bit-exact) and target TPU
+Mosaic for deployment; block shapes are chosen so every working set fits
+VMEM with MXU/VPU-aligned tile dims (multiples of 8x128 for int32).
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: bit-packed XNOR-popcount GEMM.
+
+This is the TPU-native adaptation of the CAM matchline array (DESIGN.md §2):
+the massively parallel per-row XNOR/popcount of the silicon becomes a
+VPU-resident popcount GEMM over uint32-packed operands.  Keeping operands
+bit-packed in HBM gives a 16x bandwidth advantage over bf16 and 32x over
+fp32 — the memory-roofline translation of the paper's "weights never leave
+the array" property.
+
+    out[m, n] = sum_k popcount(x[m, k] XOR w[n, k])        (Hamming distance)
+    dot_pm1   = n_bits - 2 * out                           (XNOR-popcount dot)
+
+Tiling: grid over (M/bm, N/bn); the packed K dimension stays whole per
+block (Kw words = n_bits/32; even d_model = 16 384 packs to 512 words = 2 KiB
+per row, so a (bm + bn) * Kw * 4 B working set fits VMEM for bm = bn = 256
+at < 1 MiB).  The [bm, bn, chunk] XOR temp is bounded by an inner
+fori_loop over K chunks.
+
+VMEM working set per grid cell (defaults bm=bn=256, chunk=8, Kw=512):
+    X block   256*512*4   = 512 KiB
+    W block   256*512*4   = 512 KiB
+    XOR temp  256*256*8*4 =   2 MiB
+    acc       256*256*4   = 256 KiB      -> ~3.3 MiB << 16 MiB VMEM
+
+The MXU alternative (unpack to +-1 int8, systolic matmul) is provided in
+ops.binary_gemm_mxu; the roofline crossover is discussed in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _binary_gemm_kernel(x_ref, w_ref, out_ref, *, chunk: int):
+    """One (bm, bn) output tile: HD between all (x row, w row) pairs.
+
+    x_ref: [bm, Kw] uint32 (VMEM)   w_ref: [bn, Kw] uint32 (VMEM)
+    out_ref: [bm, bn] int32 — Hamming distance over the full K range.
+    """
+    kw = x_ref.shape[-1]
+    n_chunks = kw // chunk  # Kw is padded to a chunk multiple by the wrapper
+
+    def body(c, acc):
+        xs = x_ref[:, pl.ds(c * chunk, chunk)]  # [bm, chunk]
+        ws = w_ref[:, pl.ds(c * chunk, chunk)]  # [bn, chunk]
+        xor = jax.lax.bitwise_xor(xs[:, None, :], ws[None, :, :])
+        pc = jax.lax.population_count(xor).astype(jnp.int32)
+        return acc + pc.sum(axis=-1)
+
+    acc = jnp.zeros(out_ref.shape, jnp.int32)
+    acc = jax.lax.fori_loop(0, n_chunks, body, acc)
+    out_ref[...] = acc
+
+
+def _pad_axis(a, axis: int, mult: int):
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a, size
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths), size
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "chunk", "interpret")
+)
+def binary_gemm_hd(
+    x_packed: jax.Array,
+    w_packed: jax.Array,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    chunk: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pairwise Hamming distances between packed rows.
+
+    x_packed: [M, Kw] uint32;  w_packed: [N, Kw] uint32  ->  [M, N] int32.
+    Zero-padding K is sound: pad words are 0 in both operands (XOR = 0).
+    """
+    x, m0 = _pad_axis(x_packed, 0, bm)
+    w, n0 = _pad_axis(w_packed, 0, bn)
+    x, _ = _pad_axis(x, 1, chunk)
+    w, _ = _pad_axis(w, 1, chunk)
+    m, kw = x.shape
+    n = w.shape[0]
+    grid = (m // bm, n // bn)
+    out = pl.pallas_call(
+        functools.partial(_binary_gemm_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kw), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, w)
+    return out[:m0, :n0]

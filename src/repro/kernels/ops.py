@@ -1,0 +1,62 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python with identical semantics to the compiled TPU path; on
+TPU they compile to Mosaic.  `interpret` is resolved once from the backend
+unless overridden.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import binary_gemm as _bg
+from repro.kernels import cam_search as _cs
+
+
+@functools.lru_cache(maxsize=1)
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def binary_gemm_hd(x_packed, w_packed, *, interpret: bool | None = None, **kw):
+    """Pairwise Hamming distances between packed rows ([M,Kw],[N,Kw]->[M,N])."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _bg.binary_gemm_hd(x_packed, w_packed, interpret=interpret, **kw)
+
+
+def binary_gemm_dot(
+    x_packed, w_packed, n_bits: int, *, interpret: bool | None = None, **kw
+):
+    """XNOR-popcount dot products in the +-1 domain: n_bits - 2*HD."""
+    hd = binary_gemm_hd(x_packed, w_packed, interpret=interpret, **kw)
+    return n_bits - 2 * hd
+
+
+def cam_vote(q_packed, rows_packed, thresholds, *, interpret=None, **kw):
+    """Fused Algorithm-1 vote counts ([B,Kw],[C,Kw],[P] -> [B,C] int32)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _cs.cam_vote(q_packed, rows_packed, thresholds, interpret=interpret, **kw)
+
+
+@jax.jit
+def binary_gemm_mxu(x_pm1: jax.Array, w_pm1: jax.Array) -> jax.Array:
+    """MXU path: +-1 int8 operands on the systolic array.
+
+    x: [..., K], w: [K, N] in {-1,+1}. Accumulates in int32 (exact for
+    K < 2^31). On TPU this hits the int8 MXU at 2x bf16 throughput; the
+    packed-VPU kernel wins when the workload is HBM-bandwidth-bound
+    (weights 16x smaller). See DESIGN.md roofline discussion.
+    """
+    y = jax.lax.dot_general(
+        x_pm1.astype(jnp.int8),
+        w_pm1.astype(jnp.int8),
+        (((x_pm1.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return y

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binary_gemm_hd_ref(x_packed, w_packed) -> jax.Array:
+    """Pairwise Hamming distance: [M, Kw] x [N, Kw] -> [M, N] int32."""
+    xor = jax.lax.bitwise_xor(x_packed[:, None, :], w_packed[None, :, :])
+    return jax.lax.population_count(xor).astype(jnp.int32).sum(-1)
+
+
+def cam_vote_ref(q_packed, rows_packed, thresholds) -> jax.Array:
+    """Fused multi-threshold vote: [B, C] int32."""
+    hd = binary_gemm_hd_ref(q_packed, rows_packed)
+    return (hd[:, :, None] <= thresholds.astype(jnp.int32)).sum(-1).astype(
+        jnp.int32
+    )
+
+
+def bitlinear_ref(x, w, n_bits: int | None = None) -> jax.Array:
+    """+-1-domain binary matmul oracle: y = x @ w with x,w in {-1,+1}.
+
+    x: [..., K] float/int +-1;  w: [K, N] +-1.  Returns float32 [..., N].
+    """
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32)

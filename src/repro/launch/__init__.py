@@ -1,0 +1,9 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline tooling,
+training/serving entry points.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only as a
+program entry point (``python -m repro.launch.dryrun``), never from
+library code.
+"""
+
+from repro.launch.mesh import make_production_mesh, make_host_mesh  # noqa: F401

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every jax-touching import: jax locks the device count at
+# first backend initialization.  512 host devices back the production
+# meshes (16x16 single-pod, 2x16x16 multi-pod).  This is the ONLY entry
+# point that forces a device count — tests/benchmarks see the real host.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell this driver:
+  1. builds the production mesh (launch/mesh.py),
+  2. constructs ShapeDtypeStruct stand-ins with NamedShardings attached
+     (launch/specs.py) — no allocation anywhere,
+  3. jit-lowers the step (train_step / prefill_step / decode_step),
+  4. compiles — sharding mismatches, unsupported collectives and
+     compile-time OOMs surface HERE, as hard failures,
+  5. prints memory_analysis() (bytes/device: proves the config fits or
+     doesn't) and cost_analysis(),
+  6. runs the trip-count-aware HLO walker (launch/hlo_cost.py) and the
+     roofline derivation (launch/roofline.py),
+  7. writes results/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.launch import hlo_cost, roofline, specs
+from repro.launch.mesh import make_production_mesh, validate_mesh
+from repro.sharding import (
+    LONG_CONTEXT_RULES,
+    SERVE_RULES,
+    SERVE_SEQCACHE_RULES,
+    TRAIN_RULES,
+    TRAIN_SP_RULES,
+    ZERO1_PARAM_RULES,
+    use_rules,
+)
+from repro.serve.steps import decode_step, prefill_step
+from repro.train import TrainConfig
+from repro.train.train_step import train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def rules_for(shape, variant: str = "baseline"):
+    if shape.kind == "train":
+        return TRAIN_SP_RULES if "sp" in variant.split("-") else TRAIN_RULES
+    if shape.name == "long_500k":
+        return LONG_CONTEXT_RULES
+    if "seqcache" in variant.split("-"):
+        return SERVE_SEQCACHE_RULES
+    return SERVE_RULES
+
+
+def auto_microbatches(cfg, shape, mesh, target_gib: float = 12.0) -> int:
+    """Gradient-accumulation factor targeting ~target_gib of per-device
+    residual carries (the block-scan saves h [B/mb/dp, S, D] per block —
+    the dominant training activation term under full remat).
+
+    This is exactly the knob a production framework config would set; the
+    chosen value is recorded in the cell's JSON so the baseline is
+    reproducible."""
+    if shape.kind != "train":
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    if shape.global_batch % dp:
+        return 1
+    per_dev_batch = shape.global_batch // dp
+    carries = cfg.blocks * shape.seq_len * cfg.d_model * 2 * per_dev_batch
+    mb = 1
+    while carries / mb > target_gib * 2**30 and mb < per_dev_batch:
+        mb *= 2
+    return min(mb, per_dev_batch)
+
+
+def cell_id(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'multipod' if multi_pod else 'pod'}"
+
+
+def lower_cell(cfg, shape, mesh, *, tcfg=None, donate=True,
+               variant: str = "baseline", microbatches=None, remat=None):
+    """Lower + compile one cell; returns (lowered, compiled).
+
+    variant: '-'-separated levers: sp (sequence-parallel carries),
+    zero1 (replicated params + data-sharded optimizer), seqcache
+    (sequence-sharded decode cache); remat/microbatches override config.
+    """
+    import dataclasses as _dc
+    import functools
+
+    if remat is not None:
+        cfg = _dc.replace(cfg, remat=remat)
+    rules = rules_for(shape, variant).resolve(mesh)
+    param_rules = (
+        ZERO1_PARAM_RULES.resolve(mesh)
+        if "zero1" in variant.split("-") else None
+    )
+
+    with use_rules(rules, mesh):
+        if shape.kind == "train":
+            mb = microbatches or auto_microbatches(cfg, shape, mesh)
+            tcfg = tcfg or TrainConfig(microbatches=mb)
+            state, batch = specs.train_cell_args(
+                cfg, shape, mesh, rules, tcfg, param_rules=param_rules
+            )
+            fn = functools.partial(train_step, cfg, tcfg)
+            jitted = jax.jit(fn, donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state, batch)
+        elif shape.kind == "prefill":
+            params, batch = specs.prefill_cell_args(cfg, shape, mesh, rules)
+            fn = functools.partial(prefill_step, cfg)
+            lowered = jax.jit(fn).lower(params, batch)
+        else:  # decode
+            params, cache, tokens, pos = specs.decode_cell_args(
+                cfg, shape, mesh, rules
+            )
+            fn = functools.partial(decode_step, cfg)
+            jitted = jax.jit(fn, donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params, cache, tokens, pos)
+    compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             save_hlo: bool = False, variant: str = "baseline",
+             microbatches=None, remat=None, tag: str = "") -> dict:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = len(mesh.devices.flatten())
+    t0 = time.time()
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": validate_mesh(mesh),
+        "multi_pod": multi_pod,
+        "variant": variant,
+        "status": "running",
+    }
+    try:
+        if shape.kind == "train":
+            record["microbatches"] = (
+                microbatches or auto_microbatches(cfg, shape, mesh)
+            )
+            record["remat"] = remat or cfg.remat
+        lowered, compiled = lower_cell(
+            cfg, shape, mesh, variant=variant,
+            microbatches=microbatches, remat=remat,
+        )
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+        walker = hlo_cost.analyze_hlo_text(hlo_text)
+        rep = roofline.derive(
+            cfg, shape, n_chips,
+            device_flops=walker.flops,
+            device_hbm_bytes=walker.hbm_bytes,
+            device_wire_bytes=walker.collective_wire_bytes,
+        )
+        record.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            memory_analysis={
+                "argument_bytes_per_device": ma.argument_size_in_bytes,
+                "output_bytes_per_device": ma.output_size_in_bytes,
+                "temp_bytes_per_device": ma.temp_size_in_bytes,
+                "alias_bytes_per_device": ma.alias_size_in_bytes,
+                "peak_estimate_gib": round(
+                    (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+                    / 2**30, 3),
+            },
+            cost_analysis_raw={
+                "flops": ca.get("flops"),
+                "bytes_accessed": ca.get("bytes accessed"),
+                "note": "scan bodies counted once (see hlo_walker fields)",
+            },
+            hlo_walker={
+                "device_flops": walker.flops,
+                "device_hbm_bytes": walker.hbm_bytes,
+                "device_wire_bytes": walker.collective_wire_bytes,
+                "device_collective_operand_bytes":
+                    walker.collective_operand_bytes,
+                "by_collective": walker.by_collective,
+                "collective_count": walker.collective_count,
+                "top_hbm": walker.top_hbm(12),
+            },
+            roofline=rep.to_dict(),
+            hlo_size_bytes=len(hlo_text),
+        )
+        if save_hlo:
+            (out_dir / (cell_id(arch, shape_name, multi_pod) + tag
+                        + ".hlo.txt")).write_text(hlo_text)
+        print(f"[dryrun] {arch} x {shape_name} x "
+              f"{'multipod' if multi_pod else 'pod'}: OK "
+              f"({record['compile_s']}s compile, "
+              f"peak {record['memory_analysis']['peak_estimate_gib']} GiB/dev,"
+              f" bottleneck={rep.bottleneck})")
+        print("  memory_analysis:", record["memory_analysis"])
+        print("  cost_analysis:", record["cost_analysis_raw"])
+    except Exception as e:  # noqa: BLE001 — each cell must fail in isolation
+        record.update(
+            status="error",
+            error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-4000:],
+            compile_s=round(time.time() - t0, 1),
+        )
+        print(f"[dryrun] {arch} x {shape_name}: FAILED — {e}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / (cell_id(arch, shape_name, multi_pod) + tag + ".json")
+    out_path.write_text(json.dumps(record, indent=2, default=str))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="train_4k|prefill_32k|decode_32k|long_500k|all")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (pod,data,model) mesh instead of 16x16")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod for each cell")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="'-'-joined levers: sp, zero1, seqcache")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots",
+                                                      "none"])
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output json (perf experiments)")
+    args = ap.parse_args()
+
+    archs = configs.list_archs() if args.arch == "all" else [args.arch]
+    out_dir = Path(args.out)
+
+    if args.list:
+        for a in archs:
+            cfg = configs.get_config(a)
+            names = [s.name for s in applicable_shapes(cfg)]
+            skipped = [s for s in SHAPES if s not in names]
+            print(f"{a}: {names}  (skipped: {skipped or 'none'})")
+        return
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        cfg = configs.get_config(arch)
+        app = {s.name for s in applicable_shapes(cfg)}
+        shape_names = (
+            list(SHAPES) if args.shape == "all" else [args.shape]
+        )
+        for sn in shape_names:
+            if sn not in app:
+                print(f"[dryrun] {arch} x {sn}: SKIPPED "
+                      f"(long-context inapplicable: full attention)")
+                out_dir.mkdir(parents=True, exist_ok=True)
+                for mp in meshes:
+                    (out_dir / (cell_id(arch, sn, mp) + ".json")).write_text(
+                        json.dumps({
+                            "arch": arch, "shape": sn, "multi_pod": mp,
+                            "status": "skipped",
+                            "reason": "pure full-attention arch at 512k "
+                                      "context (assignment exemption)",
+                        }, indent=2))
+                n_skip += 1
+                continue
+            for mp in meshes:
+                if args.skip_existing:
+                    p = out_dir / (cell_id(arch, sn, mp) + ".json")
+                    if p.exists():
+                        st = json.loads(p.read_text()).get("status")
+                        if st == "ok":
+                            n_skip += 1
+                            continue
+                rec = run_cell(arch, sn, mp, out_dir,
+                               save_hlo=args.save_hlo,
+                               variant=args.variant,
+                               microbatches=args.microbatches,
+                               remat=args.remat,
+                               tag=args.tag)
+                if rec["status"] == "ok":
+                    n_ok += 1
+                else:
+                    n_err += 1
+    print(f"[dryrun] done: {n_ok} ok, {n_err} failed, {n_skip} skipped")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

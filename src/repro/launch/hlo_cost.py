@@ -1,0 +1,462 @@
+"""Trip-count-aware cost extraction from optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts the body of every
+``while`` loop ONCE, but jax.lax.scan lowers to a while loop — so for a
+scanned-layer model the built-in numbers under-report FLOPs/bytes by a
+factor of the layer count (verified empirically; see DESIGN.md §Roofline
+methodology).  This walker parses ``compiled.as_text()`` and:
+
+  * multiplies every while body by its trip count (scan-generated loop
+    conditions are ``iter < constant`` — the constant is recovered from
+    the condition computation);
+  * resolves collective operand shapes through a per-computation symbol
+    table (operands are %name references in optimized HLO);
+  * counts dot/convolution FLOPs exactly (contracting dims parsed);
+  * models HBM traffic at fusion granularity (a fusion's operands +
+    results cross HBM; its internals live in registers/VMEM);
+  * models per-device wire bytes per collective from replica-group size:
+      all-gather       (n-1)/n * result
+      reduce-scatter   (n-1)/n * operand
+      all-reduce       2 (n-1)/n * operand   (RS + AG)
+      all-to-all       (n-1)/n * operand
+      collective-permute  operand
+
+All shapes in post-SPMD HLO are PER-PARTITION, so every number reported
+here is per-device, matching the roofline denominators (chip FLOP/s, chip
+HBM bw, chip link bw).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "bf16": 2,
+    "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)=%?([\w.\-{}, %]+)"
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "conditional",
+    "call", "custom-call", "get-dimension-size", "domain", "opt-barrier",
+}
+
+# VMEM-residency model: tensors at or below this size are assumed to stay
+# on-chip across fusion boundaries (registers/VMEM), so ops whose largest
+# operand/result is below it contribute no HBM traffic.  Without this, a
+# sequential scan (mamba: 4096 steps x 64 layers) charges its few-MB carry
+# tensors per trip and inflates the memory term by ~1000x; with it, the
+# loop's real HBM traffic is the xs/ys arrays — charged once at the while
+# op itself (its tuple operands hold the full stacked xs/ys).
+VMEM_RESIDENT_BYTES = 16 * 2**20
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[tuple]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    if dims == "":
+        return ()
+    return tuple(int(d) for d in dims.split(","))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # text after the opening paren of the operand list
+    operands: list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict  # %name -> type_str
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("HloModule"):
+            continue
+        head = _COMP_HEAD_RE.match(line)
+        if head and line.rstrip().endswith("{"):
+            cur = Computation(name=head.group(1), ops=[], symbols={})
+            comps[cur.name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_HEAD_RE.match(line)
+        if not m:
+            # parameters inside the signature line etc.
+            continue
+        name = m.group(1)
+        after = line[m.end():]
+        # the result type: either a balanced-paren tuple — which may
+        # contain `/*index=5*/` comment markers (an '=' inside!) — or a
+        # single token
+        if after.startswith("("):
+            depth = 0
+            end = len(after)
+            for i, ch in enumerate(after):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+            type_str, after = after[:end], after[end:].lstrip()
+        else:
+            parts = after.split(None, 1)
+            type_str = parts[0]
+            after = parts[1] if len(parts) > 1 else ""
+        m2 = _OPCODE_RE.match(after)
+        if not m2:
+            continue
+        opcode, rest = m2.groups()
+        # operand names: up to the closing paren of the operand list
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_text = rest[:end]
+        operands = _OPERAND_RE.findall(operand_text)
+        op = Op(name=name, type_str=type_str, opcode=opcode, rest=rest,
+                operands=operands)
+        cur.ops.append(op)
+        cur.symbols[name] = type_str
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in a scan-style loop condition (iter < N).
+
+    jax.lax.scan lowers to ``while (iter < length)``; the length is the
+    only large integer constant in the condition computation."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = _CONST_RE.search("constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _group_size(op: Op) -> int:
+    m = _GROUPS_RE.search(op.rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(op.rest)
+    if m:  # explicit groups {{0,1},{2,3}}
+        first = m.group(1).split("}")[0].strip("{ ")
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    return 1
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_dims = _shape_dims(op.type_str) or ()
+    out_elems = math.prod(out_dims) if out_dims else 1
+    # contracting dims of the lhs operand
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if m and op.operands:
+        lhs_type = comp.symbols.get(op.operands[0])
+        lhs_dims = _shape_dims(lhs_type) if lhs_type else None
+        if lhs_dims and m.group(1):
+            for d in m.group(1).split(","):
+                di = int(d)
+                if di < len(lhs_dims):
+                    contract *= lhs_dims[di]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_operand_bytes: float = 0.0
+    by_collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    collective_count: int = 0
+    # HBM attribution: "opcode@op_name-prefix" -> bytes (trip-multiplied)
+    hbm_by_op: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_wire_bytes += other.collective_wire_bytes * mult
+        self.collective_operand_bytes += (
+            other.collective_operand_bytes * mult
+        )
+        for k, v in other.by_collective.items():
+            self.by_collective[k] += v * mult
+        self.collective_count += int(other.collective_count * mult)
+        for k, v in other.hbm_by_op.items():
+            self.hbm_by_op[k] += v * mult
+
+    def top_hbm(self, n: int = 12) -> list:
+        return sorted(self.hbm_by_op.items(), key=lambda kv: -kv[1])[:n]
+
+
+def _walk(
+    comps: dict[str, Computation],
+    comp: Computation,
+    memo: dict,
+) -> CostTotals:
+    """Cost of one execution of `comp` (recursively, trip-count aware)."""
+    if comp.name in memo:
+        return memo[comp.name]
+    t = CostTotals()
+    for op in comp.ops:
+        oc = op.opcode
+        base = oc.replace("-start", "")
+        if base in COLLECTIVES:
+            n = _group_size(op)
+            opnd_bytes = sum(
+                _shape_bytes(comp.symbols.get(o, "")) for o in op.operands
+            )
+            out_bytes = _shape_bytes(op.type_str)
+            frac = (n - 1) / n if n > 1 else 0.0
+            if base == "all-gather":
+                wire = out_bytes * frac
+            elif base == "reduce-scatter":
+                wire = opnd_bytes * frac
+            elif base == "all-reduce":
+                wire = 2.0 * opnd_bytes * frac
+            elif base in ("all-to-all", "ragged-all-to-all"):
+                wire = opnd_bytes * frac
+            else:  # collective-permute / broadcast
+                wire = opnd_bytes
+            t.collective_wire_bytes += wire
+            t.collective_operand_bytes += opnd_bytes
+            t.by_collective[base] += wire
+            t.collective_count += 1
+            t.hbm_bytes += opnd_bytes + out_bytes
+            t.hbm_by_op[_op_key(op)] += opnd_bytes + out_bytes
+            continue
+        if oc == "while":
+            # the loop tuple holds the stacked xs/ys (+ carries): charge it
+            # once — the scan's end-to-end HBM traffic
+            opnd_bytes = sum(
+                _shape_bytes(comp.symbols.get(o, "")) for o in op.operands
+            )
+            t.hbm_bytes += opnd_bytes + _shape_bytes(op.type_str)
+            t.hbm_by_op["while-tuple@" + op.name] += (
+                opnd_bytes + _shape_bytes(op.type_str)
+            )
+            body_name = re.search(r"body=%?([\w.\-]+)", op.rest)
+            cond_name = re.search(r"condition=%?([\w.\-]+)", op.rest)
+            # primary source: XLA's own analysis in backend_config
+            tm = _TRIP_RE.search(op.rest)
+            if tm:
+                trips = int(tm.group(1))
+            elif cond_name and cond_name.group(1) in comps:
+                trips = _trip_count(comps[cond_name.group(1)])
+            else:
+                trips = 1
+            if body_name and body_name.group(1) in comps:
+                t.add(_walk(comps, comps[body_name.group(1)], memo), trips)
+            continue
+        if oc == "conditional":
+            for name in re.findall(r"%([\w.\-]+)", op.rest):
+                if name in comps:
+                    t.add(_walk(comps, comps[name], memo), 1.0)
+            continue
+        if oc in ("call", "async-start"):
+            m = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", op.rest)
+            if m and m.group(1) in comps:
+                t.add(_walk(comps, comps[m.group(1)], memo), 1.0)
+            continue
+        if oc == "fusion":
+            # FLOPs: descend into the fused computation (dots can hide
+            # there); bytes: fusion boundary = HBM materialization, under
+            # the VMEM-residency model.
+            m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+            if m and m.group(1) in comps:
+                inner = _walk(comps, comps[m.group(1)], memo)
+                t.flops += inner.flops
+            hb = _op_hbm_bytes(op, comp, comps)
+            t.hbm_bytes += hb
+            if hb:
+                t.hbm_by_op[_op_key(op)] += hb
+            continue
+        if oc in ("dot", "convolution"):
+            t.flops += _dot_flops(op, comp)
+            hb = _op_hbm_bytes(op, comp, comps)
+            t.hbm_bytes += hb
+            if hb:
+                t.hbm_by_op[_op_key(op)] += hb
+            continue
+        if oc in _SKIP_BYTES_OPS:
+            continue
+        # generic compute op (copy, reduce, broadcast, iota, slice, ...)
+        hb = _op_hbm_bytes(op, comp, comps)
+        t.hbm_bytes += hb
+        if hb:
+            t.hbm_by_op[_op_key(op)] += hb
+        # elementwise flops ~ one per output element (minor vs dots)
+        out = _shape_dims(op.type_str)
+        if out:
+            t.flops += math.prod(out)
+    memo[comp.name] = t
+    return t
+
+
+def _sliced_params(comp: Computation) -> dict:
+    """Fusion-computation parameters consumed ONLY via dynamic-slice:
+    param index -> slice result bytes.  A fusion that dynamic-slices a
+    big stacked array (scan xs) reads one SLICE per execution, not the
+    whole operand — without this, every scan-body fusion gets charged
+    the full stacked array per trip (measured 89 TB of phantom traffic
+    on the mamba cell)."""
+    # parameter op name -> index (op.rest = "<idx>), ..." after "parameter(")
+    param_idx: dict[str, int] = {}
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            mi = re.match(r"(\d+)\)", op.rest)
+            if mi:
+                param_idx[op.name] = int(mi.group(1))
+    uses: dict[str, list] = {name: [] for name in param_idx}
+    for op in comp.ops:
+        for o in op.operands:
+            if o in uses:
+                uses[o].append(op)
+    out: dict[int, float] = {}
+    for pname, ops in uses.items():
+        if ops and all(o.opcode == "dynamic-slice" for o in ops):
+            out[param_idx[pname]] = max(
+                _shape_bytes(o.type_str) for o in ops
+            )
+    return out
+
+
+def _op_key(op: Op) -> str:
+    m = re.search(r'op_name="([^"]+)"', op.rest)
+    tag = m.group(1).split("/")[-1][:48] if m else op.name[:32]
+    return f"{op.opcode}@{tag}"
+
+
+def _op_hbm_bytes(
+    op: Op, comp: Computation, comps: Optional[dict] = None
+) -> float:
+    """Operand+result bytes, zero when everything fits in VMEM.
+
+    dynamic-update-slice (and fusions rooted in one) ALIAS the big buffer
+    operand in place: the real traffic is the update slice written (plus
+    its read), not the whole buffer — without this, a scan stacking its
+    per-step outputs (ys) gets charged the full stacked array per step
+    (measured 400+ TB phantom traffic on the mamba train cell).
+    Similarly, fusion operands consumed only through dynamic-slice inside
+    the fused computation are charged at SLICE size (scan xs reads)."""
+    opnd = [_shape_bytes(comp.symbols.get(o, "")) for o in op.operands]
+    res = _shape_bytes(op.type_str)
+    if max(opnd + [res], default=0.0) <= VMEM_RESIDENT_BYTES:
+        return 0.0
+    if op.opcode == "dynamic-update-slice" or (
+        op.opcode == "fusion"
+        and ("dynamic_update_slice" in op.rest
+             or "dynamic-update-slice" in op.rest)
+    ):
+        # in-place: charge everything except the aliased buffer (the
+        # largest operand) and the aliased result
+        big = max(opnd, default=0.0)
+        return max(sum(opnd) - big, 0.0) * 2.0
+    if op.opcode == "fusion" and comps is not None:
+        m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+        if m and m.group(1) in comps:
+            sliced = _sliced_params(comps[m.group(1)])
+            if sliced:
+                adj = list(opnd)
+                for i, sz in sliced.items():
+                    if i < len(adj):
+                        adj[i] = min(adj[i], sz)
+                if max(adj + [res], default=0.0) <= VMEM_RESIDENT_BYTES:
+                    return 0.0
+                return sum(adj) + res
+    return sum(opnd) + res
+
+
+# computations reachable only as fusion internals shouldn't be re-walked
+def analyze_hlo_text(text: str) -> CostTotals:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEAD_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None or entry not in comps:
+        # fall back: the computation named main-ish
+        for name in comps:
+            if "main" in name:
+                entry = name
+                break
+    if entry is None:
+        return CostTotals()
+    memo: dict = {}
+    totals = CostTotals()
+    totals.add(_walk(comps, comps[entry], memo), 1.0)
+    totals.by_collective = dict(totals.by_collective)
+    totals.hbm_by_op = dict(totals.hbm_by_op)
+    return totals

@@ -1,0 +1,126 @@
+"""Roofline term derivation for TPU v5e from compiled dry-run artifacts.
+
+Hardware constants (per chip):
+    197 TFLOP/s bf16  |  819 GB/s HBM  |  ~50 GB/s per ICI link
+
+Three terms, all in seconds-per-step (lower bounds assuming perfect
+overlap within each resource):
+    compute    = device_flops / 197e12
+    memory     = device_hbm_bytes / 819e9
+    collective = device_wire_bytes / 50e9
+
+device_* numbers come from the trip-count-aware HLO walker
+(launch/hlo_cost.py) — post-SPMD shapes are per-partition, so the walker
+output is already per-device.  The built-in ``cost_analysis()`` numbers
+are recorded alongside for reference, with the documented while-loop
+caveat (scan bodies counted once).
+
+MODEL_FLOPS is the analytic useful-work count (6*N*D for training dense,
+6*N_active*D for MoE, plus attention terms); the ratio
+MODEL_FLOPS / HLO_FLOPS exposes remat recompute and sharding redundancy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Analytic useful FLOPs per step (global, fwd [+bwd for train])."""
+    n_active = cfg.active_param_count()
+    n_embed = cfg.vocab_size * cfg.d_model * (2 if not cfg.tie_embeddings else 1)
+    # matmul params exclude embedding lookup (gather, ~0 flops) but the
+    # 6ND convention includes the lm_head matmul == vocab*d once
+    n_matmul = n_active - n_embed + cfg.vocab_size * cfg.d_model
+
+    pat = cfg.pattern()
+    attn_subs = [i for i, k in enumerate(pat.kinds) if k == "attn"]
+
+    b = shape.global_batch
+    if shape.kind == "decode":
+        tokens = b  # one token per sequence
+        # attention reads the whole cache (or window) once per layer
+        flops_attn = 0.0
+        for i in attn_subs:
+            w = pat.windows[i]
+            kv = shape.seq_len if w is None else min(w, shape.seq_len)
+            flops_attn += cfg.blocks * 4.0 * b * kv * cfg.n_heads * cfg.head_dim
+        fwd = 2.0 * n_matmul * tokens + flops_attn
+        return {"total": fwd, "matmul": 2.0 * n_matmul * tokens,
+                "attention": flops_attn, "tokens": tokens}
+
+    s = shape.seq_len
+    tokens = b * s
+    flops_attn = 0.0
+    for i in attn_subs:
+        w = pat.windows[i]
+        kv_avg = s / 2 if w is None else min(w, s / 2)
+        flops_attn += cfg.blocks * 4.0 * b * s * kv_avg * cfg.n_heads * cfg.head_dim
+    fwd = 2.0 * n_matmul * tokens + flops_attn
+    if shape.kind == "train":
+        total = 3.0 * fwd  # bwd ~ 2x fwd
+    else:
+        total = fwd
+    return {"total": total, "matmul": (3.0 if shape.kind == "train" else 1.0)
+            * 2.0 * n_matmul * tokens,
+            "attention": (3.0 if shape.kind == "train" else 1.0) * flops_attn,
+            "tokens": tokens}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_global: float
+    hlo_flops_global: float
+    useful_ratio: float
+    step_time_lb_s: float
+    roofline_fraction: float  # useful-compute time / bottleneck time
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def derive(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    n_chips: int,
+    device_flops: float,
+    device_hbm_bytes: float,
+    device_wire_bytes: float,
+) -> RooflineReport:
+    compute_s = device_flops / PEAK_FLOPS
+    memory_s = device_hbm_bytes / HBM_BW
+    collective_s = device_wire_bytes / ICI_BW
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)["total"]
+    hlo_global = device_flops * n_chips
+    useful = mf / hlo_global if hlo_global else 0.0
+    step_lb = max(terms.values())
+    # fraction of the machine's peak that useful work would achieve if the
+    # step ran at the bottleneck bound:
+    ideal_compute_s = mf / (n_chips * PEAK_FLOPS)
+    frac = ideal_compute_s / step_lb if step_lb > 0 else 0.0
+    return RooflineReport(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_global=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=useful,
+        step_time_lb_s=step_lb,
+        roofline_fraction=min(frac, 1.0),
+    )

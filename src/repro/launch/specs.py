@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+``input_specs(cfg, shape)`` returns abstract values for the *data* inputs
+of the lowered step; ``state_specs`` / ``cache_specs`` produce the model
+state (params, optimizer, KV cache) via jax.eval_shape — nothing is ever
+allocated.  ``attach_shardings`` pins NamedShardings onto the structs so
+jit infers in_shardings directly from the arguments.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.sharding import AxisRules
+from repro.train import TrainConfig, optimizer as O
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract data inputs for one (arch x shape) cell.
+
+    train  : {"tokens"|"embeds", "labels"}          (per Eq.-style LM loss)
+    prefill: {"tokens"|"embeds"}
+    decode : {"tokens"|"embeds" (len-1), "pos"}     (cache comes separately)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda ss: jax.ShapeDtypeStruct((b, ss), jnp.int32)
+    emb = lambda ss: jax.ShapeDtypeStruct((b, ss, cfg.d_model), cfg.jax_dtype)
+    data_in = emb if cfg.embeds_input else tok
+    key = "embeds" if cfg.embeds_input else "tokens"
+    if shape.kind == "train":
+        return {key: data_in(s), "labels": tok(s)}
+    if shape.kind == "prefill":
+        return {key: data_in(s)}
+    if shape.kind == "decode":
+        return {key: data_in(1), "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules):
+    spec2 = rules.spec("batch", "seq")
+    spec3 = rules.spec("batch", "seq", "embed")
+    data = spec3 if cfg.embeds_input else spec2
+    key = "embeds" if cfg.embeds_input else "tokens"
+    if shape.kind == "train":
+        return {key: data, "labels": spec2}
+    if shape.kind == "prefill":
+        return {key: data}
+    return {key: data, "pos": P()}
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0))
+    )
+
+
+def state_specs(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
+    tcfg = tcfg or TrainConfig()
+    params = params_specs(cfg)
+    opt = jax.eval_shape(lambda p: O.init_opt_state(tcfg.opt, p), params)
+    return {"params": params, "opt": opt}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def _tree_with_shardings(tree, pspec_tree, mesh: Mesh):
+    from repro.sharding.rules import sanitize_spec
+
+    def attach(sds, spec):
+        spec = sanitize_spec(spec, sds.shape, mesh)
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        )
+
+    return jax.tree_util.tree_map(
+        attach, tree, pspec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def train_cell_args(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules: AxisRules,
+    tcfg: Optional[TrainConfig] = None,
+    param_rules: Optional[AxisRules] = None,
+):
+    """(state, batch) ShapeDtypeStructs with shardings for train_step.
+
+    param_rules: optional separate rule set for the WORKING parameters
+    (ZeRO-1: replicated bf16 params + data-sharded optimizer state)."""
+    state = state_specs(cfg, tcfg)
+    p_ps = M.param_pspecs(cfg, rules)
+    work_ps = (
+        M.param_pspecs(cfg, param_rules) if param_rules is not None else p_ps
+    )
+    opt_leaf_ps = {"m": p_ps, "v": p_ps, "step": P()}
+    if "master" in state["opt"]:
+        opt_leaf_ps["master"] = p_ps
+    state_ps = {"params": work_ps, "opt": opt_leaf_ps}
+    batch = input_specs(cfg, shape)
+    b_ps = batch_pspecs(cfg, shape, rules)
+    return (
+        _tree_with_shardings(state, state_ps, mesh),
+        _tree_with_shardings(batch, b_ps, mesh),
+    )
+
+
+def prefill_cell_args(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules: AxisRules
+):
+    params = params_specs(cfg)
+    p_ps = M.param_pspecs(cfg, rules)
+    batch = input_specs(cfg, shape)
+    b_ps = batch_pspecs(cfg, shape, rules)
+    return (
+        _tree_with_shardings(params, p_ps, mesh),
+        _tree_with_shardings(batch, b_ps, mesh),
+    )
+
+
+def decode_cell_args(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules: AxisRules
+):
+    params = params_specs(cfg)
+    p_ps = M.param_pspecs(cfg, rules)
+    cache = cache_specs(cfg, shape)
+    c_ps = M.cache_pspecs(cfg, rules)
+    batch = input_specs(cfg, shape)
+    b_ps = batch_pspecs(cfg, shape, rules)
+    data_key = "embeds" if cfg.embeds_input else "tokens"
+    return (
+        _tree_with_shardings(params, p_ps, mesh),
+        _tree_with_shardings(cache, c_ps, mesh),
+        _tree_with_shardings(batch[data_key], b_ps[data_key], mesh),
+        _tree_with_shardings(batch["pos"], P(), mesh),
+    )

@@ -1,0 +1,4 @@
+"""LM substrate: one unified decoder-only model covering dense / MoE /
+SSM / hybrid architectures, plus the paper's binary-LM integration."""
+
+from repro.models import layers, model, ssm, binary_lm  # noqa: F401

@@ -1,0 +1,133 @@
+"""The paper's technique integrated into the LM substrate.
+
+Two first-class features, enabled per-config:
+
+  * ``binary_ffn`` — BitLinear FFN projections: weights and activations
+    binarized to +-1 (sign-STE in training), matmul on the MXU as a +-1
+    GEMM with XNOR-Net scale recovery (alpha = E|W| per out-channel,
+    beta = E|x| per token).  The HBM side stores/loads weights bit-packed
+    (32x smaller than f32) — kernels/binary_gemm.py is the packed serving
+    path; training uses the differentiable +-1 GEMM below.
+
+  * ``cam_head`` — the PiC-BNN CAM-ensemble LM head for greedy decode:
+    the vocab projection is replaced by Algorithm 1 — binarize the final
+    hidden state, compute its Hamming distance to every (binarized) vocab
+    row, and emit per-class VOTES over the 33-threshold sweep instead of
+    full-precision logits.  argmax(votes) == argmax(dot) up to the sweep's
+    step-2 quantization (ties), exactly the paper's accuracy/precision
+    trade.  Practical at small vocab (musicgen, 2048 classes = one CAM
+    bank config); lowered-but-capacity-flagged at 128k+ vocab (DESIGN.md
+    §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.binarize import sign_ste
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# BitLinear FFN
+# ---------------------------------------------------------------------------
+def _bit_matmul(x, w):
+    """sign(x) @ sign(w) with XNOR-Net scale recovery, differentiable.
+
+    x: [..., K] latent activations; w: [K, N] latent weights.
+    On TPU the +-1 operands hit the int8 MXU path (serving casts to int8;
+    training keeps the STE-differentiable float +-1 form).
+    """
+    alpha = jnp.mean(jnp.abs(w), axis=0)  # [N] per-out-channel scale
+    beta = jnp.mean(jnp.abs(x), axis=-1, keepdims=True)  # [..., 1]
+    xb = sign_ste(x.astype(F32))
+    wb = sign_ste(w.astype(F32))
+    y = jax.lax.dot_general(
+        xb, wb, (((x.ndim - 1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    return (y * alpha * beta).astype(x.dtype)
+
+
+def bitlinear_mlp(p, cfg: ModelConfig, h):
+    """Drop-in binary replacement for layers.mlp (same param pytree)."""
+    if cfg.mlp_act == "swiglu":
+        gate = _bit_matmul(h, p["w_gate"])
+        up = _bit_matmul(h, p["w_up"])
+        act = shard(jax.nn.silu(gate.astype(F32)).astype(h.dtype) * up,
+                    "batch", "seq", "mlp")
+        return shard(_bit_matmul(act, p["w_down"]), "batch", "seq", "embed")
+    act = jax.nn.gelu(_bit_matmul(h, p["w_in"]).astype(F32)).astype(h.dtype)
+    act = shard(act, "batch", "seq", "mlp")
+    return shard(_bit_matmul(act, p["w_out"]), "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# CAM-ensemble LM head (Algorithm 1 as the vocab projection)
+# ---------------------------------------------------------------------------
+def init_cam_head(cfg: ModelConfig, key):
+    rows = (
+        jax.random.normal(key, (cfg.vocab_size, cfg.d_model), cfg.jax_dtype)
+        * cfg.d_model**-0.5
+    )
+    # Sweep centered on the majority point of a d_model-bit row (the
+    # ensemble.build_head convention).  Beyond-paper adaptation: the
+    # paper's step-2 sweep covers +-32 HD — enough to separate 10-20
+    # classes, but at LM vocab scale (2048+ classes) the min-HD among
+    # thousands of rows routinely falls outside a +-32 window and every
+    # saturated class ties.  We scale the sweep to +-3 sigma of the
+    # HD distribution (sigma = sqrt(D)/2 for random +-1 rows), keeping
+    # the paper's pass count.
+    n_pass = cfg.cam_head_thresholds
+    center = cfg.d_model // 2
+    # The sweep must bracket the BEST-matching row among V candidates.
+    # Extreme-value theory: min-HD over V ~Binomial(D, 1/2) rows sits at
+    # center - sigma*sqrt(2 ln V); we take one extra sigma of margin.
+    # The pass count sets the resolution; tie-free ranking needs step 1,
+    # i.e. n_pass >= 2*halfspan + 1 (quantified in examples/picbnn_serve
+    # .py's pass-count sweep).
+    import math
+
+    sigma = (cfg.d_model**0.5) / 2.0
+    halfspan = max(
+        int(sigma * (math.sqrt(2.0 * math.log(max(cfg.vocab_size, 2))) + 1.0)
+            + 0.5),
+        1,
+    )
+    t = center - halfspan + jnp.round(
+        jnp.linspace(0, 2 * halfspan, n_pass)
+    ).astype(jnp.int32)
+    return {"rows": rows, "thresholds": t}
+
+
+def cam_head_axes(cfg: ModelConfig):
+    return {"rows": ("p_vocab", "p_mlp_d"), "thresholds": (None,)}
+
+
+def cam_head_logits(p, cfg: ModelConfig, h):
+    """Greedy-decode 'logits' from the binary CAM match.
+
+    h: [B, D] final hidden states.  The +-1 GEMM runs on the MXU (the
+    TPU-native CAM search; DESIGN.md §2); HD = (D - dot) / 2.
+
+    cfg.cam_head_mode:
+      "votes" — Algorithm-1 vote counts #{t : HD <= T_t} (PiC-BNN: purely
+                binary measurements, no ADC);
+      "exact" — the full-precision popcount readout (the ADC/TDC baseline
+                the paper compares against; same binary matching, analog
+                readout precision).
+    Output is float so the engine's argmax/sampling interface is unchanged.
+    """
+    hb = jnp.where(h >= 0, 1.0, -1.0).astype(cfg.jax_dtype)
+    rb = jnp.where(p["rows"] >= 0, 1.0, -1.0).astype(cfg.jax_dtype)
+    dot = jax.lax.dot_general(
+        hb, rb.T, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )  # [B, V]
+    if cfg.cam_head_mode == "exact":
+        return shard(dot, "batch", "vocab")
+    hd = (cfg.d_model - dot) * 0.5
+    votes = (hd[..., None] <= p["thresholds"].astype(F32)).sum(-1)
+    return shard(votes.astype(F32), "batch", "vocab")

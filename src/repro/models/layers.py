@@ -1,0 +1,486 @@
+"""Transformer substrate: norms, RoPE, GQA flash attention, MLP, MoE.
+
+All layers are pure functions over parameter dicts (pytrees), so layer
+stacks can be jax.lax.scan'ed over stacked parameters.  Sharding is
+annotated through logical axis names (repro.sharding); the same code
+serves every parallelism layout.
+
+Numerics: parameters live in cfg.jax_dtype (bf16 for the full configs);
+matmuls accumulate in f32 (preferred_element_type); softmax/norms in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+def _matmul(x, w):
+    """bf16-in f32-accumulate matmul, result cast back to x.dtype."""
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, key=None):
+    p = {"scale": jnp.ones((cfg.d_model,), cfg.jax_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), cfg.jax_dtype)
+    return p
+
+
+def apply_norm(p, cfg: ModelConfig, x):
+    xf = x.astype(F32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6)
+        return (y * p["scale"].astype(F32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (y * p["scale"].astype(F32) + p["bias"].astype(F32)).astype(x.dtype)
+
+
+def _head_norm(x):
+    """Per-head RMS norm (chameleon QK-norm), no learned scale."""
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(cfg: ModelConfig):
+    half = cfg.head_dim // 2
+    return cfg.rope_theta ** (-jnp.arange(0, half, dtype=F32) / half)
+
+
+def apply_rope(x, positions, inv_freq):
+    """x: [B, S, H, dh]; positions: [B, S] (or [S]) int32."""
+    angles = positions[..., None].astype(F32) * inv_freq  # [B, S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [B, S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, flash-style chunked online softmax, sliding window)
+# ---------------------------------------------------------------------------
+def init_attention(cfg: ModelConfig, key):
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d**-0.5
+    dt = cfg.jax_dtype
+    return {
+        "wq": (jax.random.normal(k1, (d, hq, hd), dt) * s),
+        "wk": (jax.random.normal(k2, (d, hkv, hd), dt) * s),
+        "wv": (jax.random.normal(k3, (d, hkv, hd), dt) * s),
+        "wo": (jax.random.normal(k4, (hq, hd, d), dt) * s),
+    }
+
+
+def attention_param_axes(cfg: ModelConfig):
+    return {
+        "wq": ("p_attn_d", "p_attn_heads", None),
+        "wk": ("p_attn_d", "p_attn_heads", None),
+        "wv": ("p_attn_d", "p_attn_heads", None),
+        "wo": ("p_attn_heads", None, "p_attn_d"),
+    }
+
+
+def _flash_attention(q, k, v, q_pos, k_pos, window, chunk: int):
+    """Chunked online-softmax attention with causal + window masking.
+
+    q      : [B, G, R, Sq, dh]   (G = kv groups, R = heads per group)
+    k, v   : [B, G, Sk, dh]
+    q_pos  : [B, Sq] int32 absolute positions of the queries
+    k_pos  : [B, Sk] int32 absolute positions of the keys (-1 = invalid)
+    window : int or traced scalar; attend iff 0 <= qp - kp < window
+    Returns [B, G, R, Sq, dh] in q.dtype.
+    """
+    b, g, r, sq, dh = q.shape
+    sk = k.shape[2]
+    scale = dh**-0.5
+    nchunk = -(-sk // chunk)
+    pad = nchunk * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    # reshape into chunks for the scan: [nchunk, B, G, chunk, dh]
+    kc = k.reshape(b, g, nchunk, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, g, nchunk, chunk, dh).transpose(2, 0, 1, 3, 4)
+    pc = k_pos.reshape(b, nchunk, chunk).transpose(1, 0, 2)
+
+    qf = q.astype(F32) * scale
+    neg = jnp.float32(-1e30)
+
+    # Remat the chunk body: without this, scan-AD stacks the per-chunk
+    # score matrices p [B,G,R,Sq,chunk] as residuals — the full S^2
+    # attention matrix in HBM, exactly what flash attention exists to
+    # avoid.  With it, backward recomputes p from (q, k-chunk); only the
+    # (m, l, acc) carries are stacked: S*dh instead of S^2 per head.
+    @jax.checkpoint
+    def body(carry, inputs):
+        m, l, acc = carry
+        k_i, v_i, kp_i = inputs
+        # scores: [B, G, R, Sq, chunk]
+        s = jnp.einsum(
+            "bgrqd,bgcd->bgrqc", qf, k_i.astype(F32),
+            preferred_element_type=F32,
+        )
+        delta = q_pos[:, None, None, :, None] - kp_i[:, None, None, None, :]
+        valid = (delta >= 0) & (delta < window) & (
+            kp_i[:, None, None, None, :] >= 0
+        )
+        s = jnp.where(valid, s, neg)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        correction = jnp.exp(m - m_new)
+        l_new = l * correction + p.sum(-1)
+        acc_new = acc * correction[..., None] + jnp.einsum(
+            "bgrqc,bgcd->bgrqd", p, v_i.astype(F32),
+            preferred_element_type=F32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, g, r, sq), neg, F32)
+    l0 = jnp.zeros((b, g, r, sq), F32)
+    a0 = jnp.zeros((b, g, r, sq, dh), F32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention(
+    p,
+    cfg: ModelConfig,
+    h,
+    positions,
+    inv_freq,
+    *,
+    window,
+    cache: Optional[dict] = None,
+    cache_index=None,
+):
+    """GQA attention sublayer (post-norm input h: [B, S, D]).
+
+    Training / prefill: cache is None or a to-be-filled cache dict; the
+    full [B, S] key/value set is used via the flash path.
+    Decode: S == 1; cache holds past KV (+ absolute positions); the new
+    KV is written at slot cache_index % cache_len (rolling for windows).
+
+    Returns (out [B, S, D], new_cache or None).
+    """
+    b, s, d = h.shape
+    g, r = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum(
+        "bsd,dhk->bshk", h, p["wv"], preferred_element_type=F32
+    ).astype(h.dtype)
+    if cfg.qk_norm:
+        q, k = _head_norm(q), _head_norm(k)
+    q = apply_rope(q.astype(h.dtype), positions, inv_freq)
+    k = apply_rope(k.astype(h.dtype), positions, inv_freq)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    qg = q.reshape(b, s, g, r, hd).transpose(0, 2, 3, 1, 4)  # [B,G,R,S,dh]
+
+    new_cache = None
+    if cache is not None and s == 1:
+        # ---- decode: write new kv into the (rolling) cache ----
+        cache_len = cache["k"].shape[1]
+        slot = (cache_index % cache_len).astype(jnp.int32)
+        k_c = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+        )
+        v_c = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+        )
+        pos_new = jnp.broadcast_to(positions.astype(jnp.int32), (b, 1))
+        pos_c = jax.lax.dynamic_update_slice(cache["pos"], pos_new, (0, slot))
+        new_cache = {"k": k_c, "v": v_c, "pos": pos_c}
+        # q_len == 1: direct attention over the cache IN ITS STORED LAYOUT
+        # [B, L, G, dh].  The previous flash path transposed + re-chunked
+        # the whole cache every step (3x full-cache copies per layer,
+        # measured at 15 TB/step on musicgen decode_32k); reading it once
+        # through the einsum is the roofline-minimal access pattern.
+        scale = hd**-0.5
+        qf = (qg.astype(F32) * scale).astype(qg.dtype)  # [B, G, R, 1, dh]
+        # keep the CACHE operand in bf16 — an explicit astype(F32) would
+        # materialize an f32 copy of the whole cache (2x its size in HBM
+        # traffic per step); the MXU accumulates in f32 regardless via
+        # preferred_element_type.
+        scores = jnp.einsum(
+            "bgrqd,blgd->bgrql", qf, k_c,
+            preferred_element_type=F32,
+        )
+        delta = (
+            positions.astype(jnp.int32)[:, 0][:, None, None, None, None]
+            - pos_c[:, None, None, None, :]
+        )
+        valid = (delta >= 0) & (delta < window) & (
+            pos_c[:, None, None, None, :] >= 0
+        )
+        scores = jnp.where(valid, scores, jnp.float32(-1e30))
+        probs = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+        out = jnp.einsum(
+            "bgrql,blgd->bgrqd", probs, v_c,
+            preferred_element_type=F32,
+        ).astype(h.dtype)
+    else:
+        # ---- train / prefill over the in-context keys ----
+        if cache is not None:
+            # prefill writes the cache (rolling if window < S)
+            cache_len = cache["k"].shape[1]
+            if cache_len >= s:
+                k_c = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+                )
+                v_c = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+                )
+                pos_c = jax.lax.dynamic_update_slice(
+                    cache["pos"],
+                    jnp.broadcast_to(positions.astype(jnp.int32), (b, s)),
+                    (0, 0),
+                )
+            else:  # keep the last cache_len positions (rolling window)
+                # slot convention: position p lives at slot p % cache_len
+                # (decode's dynamic_update_slice relies on it) — roll the
+                # trailing window so slots line up with that mapping.
+                shift = (s - cache_len) % cache_len
+                k_c = jnp.roll(
+                    k[:, -cache_len:].astype(cache["k"].dtype), shift, axis=1
+                )
+                v_c = jnp.roll(
+                    v[:, -cache_len:].astype(cache["v"].dtype), shift, axis=1
+                )
+                pos_c = jnp.roll(
+                    jnp.broadcast_to(
+                        positions.astype(jnp.int32), (b, s)
+                    )[:, -cache_len:],
+                    shift,
+                    axis=1,
+                )
+            new_cache = {"k": k_c, "v": v_c, "pos": pos_c}
+        kk = k.transpose(0, 2, 1, 3)
+        vv = v.transpose(0, 2, 1, 3)
+        kpos = jnp.broadcast_to(positions.astype(jnp.int32), (b, s))
+        out = _flash_attention(
+            qg, kk, vv, kpos, kpos, window, chunk=min(cfg.attn_chunk, s)
+        )
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, g * r, hd)
+    out = shard(out, "batch", "seq", "heads", None)
+    # the out-projection contracts the TP-sharded head dim: its partial
+    # sums are what GSPMD all-reduces — bf16 output halves that wire
+    y = jnp.einsum(
+        "bshk,hkd->bsd", out, p["wo"],
+        preferred_element_type=(h.dtype if cfg.tp_ar_bf16 else F32),
+    ).astype(h.dtype)
+    return shard(y, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.jax_dtype
+    s_in, s_out = d**-0.5, f**-0.5
+    if cfg.mlp_act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": jax.random.normal(k1, (d, f), dt) * s_in,
+            "w_up": jax.random.normal(k2, (d, f), dt) * s_in,
+            "w_down": jax.random.normal(k3, (f, d), dt) * s_out,
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": jax.random.normal(k1, (d, f), dt) * s_in,
+        "w_out": jax.random.normal(k2, (f, d), dt) * s_out,
+    }
+
+
+def mlp_param_axes(cfg: ModelConfig):
+    if cfg.mlp_act == "swiglu":
+        return {
+            "w_gate": ("p_mlp_d", "p_mlp_f"),
+            "w_up": ("p_mlp_d", "p_mlp_f"),
+            "w_down": ("p_mlp_f", "p_mlp_d"),
+        }
+    return {"w_in": ("p_mlp_d", "p_mlp_f"), "w_out": ("p_mlp_f", "p_mlp_d")}
+
+
+def mlp(p, cfg: ModelConfig, h):
+    if cfg.binary_ffn:
+        from repro.models.binary_lm import bitlinear_mlp
+
+        return bitlinear_mlp(p, cfg, h)
+    down_t = h.dtype if cfg.tp_ar_bf16 else F32
+
+    def _down(x, w):  # TP-contracting projection (see attention note)
+        y = jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=down_t,
+        )
+        return y.astype(h.dtype)
+
+    if cfg.mlp_act == "swiglu":
+        gate = _matmul(h, p["w_gate"])
+        up = _matmul(h, p["w_up"])
+        act = shard(jax.nn.silu(gate) * up, "batch", "seq", "mlp")
+        return shard(_down(act, p["w_down"]), "batch", "seq", "embed")
+    act = jax.nn.gelu(_matmul(h, p["w_in"]))
+    act = shard(act, "batch", "seq", "mlp")
+    return shard(_down(act, p["w_out"]), "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, capacity-bounded scatter dispatch, GShard-style)
+# ---------------------------------------------------------------------------
+def init_moe(cfg: ModelConfig, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.jax_dtype
+    s_in, s_out = d**-0.5, f**-0.5
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    p = {"router": jax.random.normal(k0, (d, e), dt) * s_in}
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = jax.random.normal(k1, (e, d, f), dt) * s_in
+        p["w_up"] = jax.random.normal(k2, (e, d, f), dt) * s_in
+        p["w_down"] = jax.random.normal(k3, (e, f, d), dt) * s_out
+    else:
+        p["w_in"] = jax.random.normal(k1, (e, d, f), dt) * s_in
+        p["w_out"] = jax.random.normal(k2, (e, f, d), dt) * s_out
+    return p
+
+
+def moe_param_axes(cfg: ModelConfig):
+    if cfg.mlp_act == "swiglu":
+        return {
+            "router": (None, None),
+            "w_gate": ("p_expert", "p_mlp_d", "p_mlp_f"),
+            "w_up": ("p_expert", "p_mlp_d", "p_mlp_f"),
+            "w_down": ("p_expert", "p_mlp_f", "p_mlp_d"),
+        }
+    return {
+        "router": (None, None),
+        "w_in": ("p_expert", "p_mlp_d", "p_mlp_f"),
+        "w_out": ("p_expert", "p_mlp_f", "p_mlp_d"),
+    }
+
+
+def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.moe_top_k / cfg.n_experts)
+    return max(c, cfg.moe_top_k)
+
+
+def moe(p, cfg: ModelConfig, h, *, aux: Optional[dict] = None):
+    """Capacity-bounded top-k MoE over h: [B, S, D] -> [B, S, D].
+
+    SHARD-LOCAL dispatch: tokens are grouped by their data shard
+    ([G, T_loc, D] with G = data-parallel width, leading dim sharded), so
+    the capacity cumsum, the scatter into the [G, E, C_loc, D] expert
+    buffers and the gather back are all shard-local — GSPMD emits ZERO
+    collectives for dispatch/combine (measured: the global-cumsum variant
+    cost 1.76 TB/device of all-reduce on mixtral train_4k).  Capacity is
+    per shard (C_loc = cf * T_loc * k / E), the standard GShard practice;
+    with one shard this degenerates to exact global capacity (the unit
+    tests' semantics).  Overflow beyond C_loc is dropped.
+    """
+    from repro.sharding.rules import logical_axis_size
+
+    b, s, d = h.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    g = logical_axis_size("batch")
+    if t % g != 0:
+        g = 1
+    tl = t // g  # tokens per shard group
+    cap = max(int(cfg.capacity_factor * tl * k / e), cfg.moe_top_k)
+    x = h.reshape(g, tl, d)
+    x = shard(x, "batch", None, "embed")
+
+    logits = jnp.einsum(
+        "gtd,de->gte", x, p["router"], preferred_element_type=F32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # [G, Tl, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    if aux is not None:
+        # load-balancing auxiliary loss terms (Switch/GShard)
+        me = probs.mean((0, 1))  # [E]
+        ce = jax.nn.one_hot(idx[..., 0], e, dtype=F32).mean((0, 1))
+        aux["moe_aux"] = aux.get("moe_aux", 0.0) + e * jnp.sum(me * ce)
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # [G, Tl, k, E]
+    flat = onehot.reshape(g, tl * k, e)
+    # priority order within the shard: earlier tokens win capacity slots
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos_sel = (pos * flat).sum(-1)  # [G, Tl*k]
+    e_sel = idx.reshape(g, tl * k)
+    keep = pos_sel < cap
+
+    xrep = jnp.broadcast_to(x[:, :, None, :], (g, tl, k, d)).reshape(
+        g, tl * k, d
+    )
+    contrib = jnp.where(keep[..., None], xrep, jnp.zeros_like(xrep))
+    gidx = jnp.broadcast_to(jnp.arange(g)[:, None], (g, tl * k))
+    buf = jnp.zeros((g, e, cap, d), h.dtype)
+    buf = buf.at[
+        gidx, jnp.where(keep, e_sel, 0), jnp.where(keep, pos_sel, 0)
+    ].add(contrib, mode="drop")
+    buf = shard(buf, "batch", "expert", "capacity", "embed")
+
+    if cfg.mlp_act == "swiglu":
+        g_ = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"],
+                        preferred_element_type=F32)
+        u_ = jnp.einsum("gecd,edf->gecf", buf, p["w_up"],
+                        preferred_element_type=F32)
+        down_t = h.dtype if cfg.tp_ar_bf16 else F32
+        a_ = (jax.nn.silu(g_) * u_).astype(h.dtype)
+        a_ = shard(a_, "batch", "expert", "capacity", "mlp")
+        o_ = jnp.einsum("gecf,efd->gecd", a_, p["w_down"],
+                        preferred_element_type=down_t)
+    else:
+        down_t = h.dtype if cfg.tp_ar_bf16 else F32
+        a_ = jax.nn.gelu(
+            jnp.einsum("gecd,edf->gecf", buf, p["w_in"],
+                       preferred_element_type=F32)
+        ).astype(h.dtype)
+        a_ = shard(a_, "batch", "expert", "capacity", "mlp")
+        o_ = jnp.einsum("gecf,efd->gecd", a_, p["w_out"],
+                        preferred_element_type=down_t)
+    o_ = shard(o_.astype(h.dtype), "batch", "expert", "capacity", "embed")
+
+    y_slots = o_[
+        gidx, jnp.where(keep, e_sel, 0), jnp.where(keep, pos_sel, 0)
+    ]
+    gate_flat = gate.reshape(g, tl * k)
+    y_slots = jnp.where(keep[..., None], y_slots, jnp.zeros_like(y_slots))
+    y_slots = (y_slots.astype(F32) * gate_flat[..., None]).astype(h.dtype)
+    y = y_slots.reshape(g, tl, k, d).sum(axis=2)
+    return shard(y.reshape(b, s, d), "batch", "seq", "embed")

@@ -1,0 +1,466 @@
+"""The unified decoder-only model covering all ten assigned architectures.
+
+One definition, driven entirely by ModelConfig:
+  * dense / GQA transformers (stablelm, llama3.2, starcoder2, llama3-405b,
+    chameleon, musicgen)
+  * MoE transformers (mixtral, llama4-maverick)
+  * attention-free SSM (falcon-mamba)
+  * hybrid interleaves (jamba: 1 attn : 7 mamba, MoE every other layer)
+
+Layer stacks are scanned (jax.lax.scan over stacked params) in units of
+the config's LayerPattern "superblock" — homogeneous archs scan single
+layers; jamba scans 8-sublayer superblocks; llama4 scans 4-sublayer
+(3 local + 1 global attention) superblocks.  Scanning keeps the HLO (and
+compile time) independent of depth, which is what makes the 126-layer
+llama3-405b dry-run tractable.
+
+Entry points:
+  init_params / param_axes  — parameter pytree + logical shardings
+  forward                   — [B, S] tokens -> [B, S, V] logits (training)
+  loss_fn                   — chunked-vocab cross entropy (+ MoE aux)
+  init_cache / prefill / decode — serving paths
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.sharding import shard, logical_to_spec
+
+F32 = jnp.float32
+FULL_WINDOW = 1 << 30
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_sublayer(cfg: ModelConfig, kind: str, use_moe: bool, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": L.init_norm(cfg, k1)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(cfg, k2)
+        p["norm2"] = L.init_norm(cfg, k3)
+        p["ffn"] = L.init_moe(cfg, k4) if use_moe else L.init_mlp(cfg, k4)
+    elif kind == "mamba":
+        p["mamba"] = S.init_mamba(cfg, k2)
+        if cfg.family in ("hybrid",):  # jamba: mamba sublayers carry an FFN
+            p["norm2"] = L.init_norm(cfg, k3)
+            p["ffn"] = L.init_moe(cfg, k4) if use_moe else L.init_mlp(cfg, k4)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_block(cfg: ModelConfig, key):
+    pat = cfg.pattern()
+    keys = jax.random.split(key, pat.size)
+    return {
+        f"sub{i}": _init_sublayer(cfg, pat.kinds[i], pat.moe_mask[i], keys[i])
+        for i in range(pat.size)
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kb, kh, kn = jax.random.split(key, 4)
+    dt = cfg.jax_dtype
+    embed = (
+        jax.random.normal(ke, (cfg.vocab_size, cfg.d_model), dt)
+        * cfg.d_model**-0.5
+    )
+    block_keys = jax.random.split(kb, cfg.blocks)
+    blocks = jax.vmap(lambda k: _init_block(cfg, k))(block_keys)
+    p: Params = {
+        "embed": embed,
+        "blocks": blocks,
+        "final_norm": L.init_norm(cfg, kn),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(kh, (cfg.d_model, cfg.vocab_size), dt)
+            * cfg.d_model**-0.5
+        )
+    if cfg.cam_head:
+        from repro.models import binary_lm
+
+        p["cam_head"] = binary_lm.init_cam_head(cfg, kh)
+    return p
+
+
+def _sublayer_axes(cfg: ModelConfig, kind: str, use_moe: bool):
+    norm_ax = {"scale": (None,)}
+    if cfg.norm == "layernorm":
+        norm_ax["bias"] = (None,)
+    p = {"norm1": norm_ax}
+    if kind == "attn":
+        p["attn"] = L.attention_param_axes(cfg)
+        p["norm2"] = norm_ax
+        p["ffn"] = L.moe_param_axes(cfg) if use_moe else L.mlp_param_axes(cfg)
+    else:
+        p["mamba"] = S.mamba_param_axes(cfg)
+        if cfg.family in ("hybrid",):
+            p["norm2"] = norm_ax
+            p["ffn"] = (
+                L.moe_param_axes(cfg) if use_moe else L.mlp_param_axes(cfg)
+            )
+    return p
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    """Pytree of logical-axis tuples mirroring init_params' structure.
+
+    Stacked block params get a leading None (blocks dim is never sharded)."""
+    pat = cfg.pattern()
+    blocks = {
+        f"sub{i}": jax.tree_util.tree_map(
+            lambda ax: (None,) + tuple(ax),
+            _sublayer_axes(cfg, pat.kinds[i], pat.moe_mask[i]),
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        for i in range(pat.size)
+    }
+    p: Params = {
+        "embed": ("p_embed_v", "p_embed_d"),
+        "blocks": blocks,
+        "final_norm": {"scale": (None,)}
+        | ({"bias": (None,)} if cfg.norm == "layernorm" else {}),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ("p_mlp_d", "p_vocab")
+    if cfg.cam_head:
+        from repro.models import binary_lm
+
+        p["cam_head"] = binary_lm.cam_head_axes(cfg)
+    return p
+
+
+def param_pspecs(cfg: ModelConfig, rules) -> Params:
+    """PartitionSpec pytree for in_shardings (dry-run / checkpoint)."""
+    axes = param_axes(cfg)
+    return jax.tree_util.tree_map(
+        lambda ax: rules.spec(*ax), axes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _run_sublayer(
+    p,
+    cfg: ModelConfig,
+    kind: str,
+    use_moe: bool,
+    window: Optional[int],
+    h,
+    positions,
+    inv_freq,
+    cache: Optional[dict],
+    cache_index,
+    aux: Optional[dict],
+):
+    x = L.apply_norm(p["norm1"], cfg, h)
+    new_cache = None
+    if kind == "attn":
+        w = FULL_WINDOW if window is None else window
+        y, new_cache = L.attention(
+            p["attn"], cfg, x, positions, inv_freq,
+            window=w, cache=cache, cache_index=cache_index,
+        )
+        h = h + y
+        x2 = L.apply_norm(p["norm2"], cfg, h)
+        if use_moe:
+            y2 = L.moe(p["ffn"], cfg, x2, aux=aux)
+        else:
+            y2 = L.mlp(p["ffn"], cfg, x2)
+        h = h + y2
+    else:
+        y, new_cache = S.mamba_block(p["mamba"], cfg, x, cache=cache)
+        h = h + y
+        if "ffn" in p:
+            x2 = L.apply_norm(p["norm2"], cfg, h)
+            if use_moe:
+                y2 = L.moe(p["ffn"], cfg, x2, aux=aux)
+            else:
+                y2 = L.mlp(p["ffn"], cfg, x2)
+            h = h + y2
+    return h, new_cache
+
+
+def _block_fn(
+    cfg: ModelConfig,
+    block_params,
+    h,
+    positions,
+    inv_freq,
+    block_cache,
+    cache_index,
+    collect_aux: bool,
+):
+    """One scan step: runs every sublayer of the pattern."""
+    pat = cfg.pattern()
+    new_cache = {}
+    aux = {"moe_aux": jnp.zeros((), F32)} if collect_aux else None
+    for i in range(pat.size):
+        sub = f"sub{i}"
+        c = block_cache.get(sub) if block_cache is not None else None
+        h, nc = _run_sublayer(
+            block_params[sub],
+            cfg,
+            pat.kinds[i],
+            pat.moe_mask[i],
+            pat.windows[i],
+            h,
+            positions,
+            inv_freq,
+            c,
+            cache_index,
+            aux,
+        )
+        if nc is not None:
+            new_cache[sub] = nc
+    aux_out = aux["moe_aux"] if collect_aux else jnp.zeros((), F32)
+    return h, (new_cache if new_cache else None), aux_out
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _stack(cfg, params, h, positions, cache, cache_index, collect_aux):
+    """Scan the block stack. cache: stacked [blocks, ...] pytree or None."""
+    inv_freq = L.rope_frequencies(cfg)
+
+    def body(carry, xs):
+        h, aux_sum = carry
+        block_params, block_cache = xs
+        # sequence-parallel residual carry (no-op unless the active rules
+        # map "act_seq" to a mesh axis — see TRAIN_SP_RULES)
+        h = shard(h, "batch", "act_seq", "embed")
+        h, new_cache, aux = _block_fn(
+            cfg, block_params, h, positions, inv_freq,
+            block_cache, cache_index, collect_aux,
+        )
+        return (h, aux_sum + aux), new_cache
+
+    body = _remat_wrap(cfg, body)
+    (h, aux_sum), new_cache = jax.lax.scan(
+        body, (h, jnp.zeros((), F32)), (params["blocks"], cache)
+    )
+    return h, new_cache, aux_sum
+
+
+def _embed_in(params, cfg: ModelConfig, tokens, embeds):
+    if embeds is not None:
+        h = embeds.astype(cfg.jax_dtype)
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0)
+    return shard(h, "batch", "seq", "embed")
+
+
+def _lm_head(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens=None,
+    embeds=None,
+    positions=None,
+    collect_aux: bool = False,
+):
+    """Training-mode forward: full-sequence logits [B, S, V] (bf16)."""
+    b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = _embed_in(params, cfg, tokens, embeds)
+    h, _, aux = _stack(cfg, params, h, positions, None, None, collect_aux)
+    h = L.apply_norm(params["final_norm"], cfg, h)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h, _lm_head(params, cfg), preferred_element_type=F32
+    )
+    return shard(logits, "batch", "seq", "vocab"), aux
+
+
+def chunked_loss(
+    params: Params,
+    cfg: ModelConfig,
+    h,
+    labels,
+    chunk: int = 512,
+):
+    """Cross entropy with the [B, chunk, V] logits tensor bounded.
+
+    The full-sequence logits of a 200k-vocab model at 1M tokens would be
+    ~0.8 TB in f32; chunking the sequence bounds the live logits tensor
+    while remat recomputes per-chunk activations in the backward pass.
+    """
+    b, s, d = h.shape
+    head = _lm_head(params, cfg)
+    n_chunks = s // chunk if s % chunk == 0 else 1
+    if s % chunk != 0:
+        chunk = s
+        n_chunks = 1
+    hc = h.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(tot, xs):
+        h_i, l_i = xs
+        logits = jnp.einsum(
+            "bsd,dv->bsv", h_i, head, preferred_element_type=F32
+        )
+        logits = shard(logits, "batch", "seq", "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, l_i[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        return tot + (logz - gold).sum(), None
+
+    body = _remat_wrap(cfg, body)
+    total, _ = jax.lax.scan(body, jnp.zeros((), F32), (hc, lc))
+    return total / (b * s)
+
+
+def loss_fn(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    aux_weight: float = 0.01,
+):
+    """batch: {"tokens" | "embeds", "labels"} -> scalar loss (+ metrics)."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = _embed_in(params, cfg, tokens, embeds)
+    collect_aux = cfg.n_experts > 0
+    h, _, aux = _stack(cfg, params, h, positions, None, None, collect_aux)
+    h = L.apply_norm(params["final_norm"], cfg, h)
+    ce = chunked_loss(params, cfg, h, batch["labels"])
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+def _attn_cache(cfg: ModelConfig, batch: int, max_len: int, window):
+    length = max_len if window is None else min(window, max_len)
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, g, hd), cfg.jax_dtype),
+        "v": jnp.zeros((batch, length, g, hd), cfg.jax_dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked [blocks, ...] cache pytree for decode."""
+    pat = cfg.pattern()
+
+    def one_block(_):
+        c = {}
+        for i in range(pat.size):
+            if pat.kinds[i] == "attn":
+                c[f"sub{i}"] = _attn_cache(cfg, batch, max_len, pat.windows[i])
+            else:
+                c[f"sub{i}"] = S.init_mamba_cache(cfg, batch)
+        return c
+
+    cache = jax.vmap(one_block)(jnp.arange(cfg.blocks))
+    return cache
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes for the cache pytree (leading blocks dim unsharded)."""
+    pat = cfg.pattern()
+    blocks = {}
+    for i in range(pat.size):
+        if pat.kinds[i] == "attn":
+            blocks[f"sub{i}"] = {
+                "k": (None, "batch", "kv_seq", "kv_heads", None),
+                "v": (None, "batch", "kv_seq", "kv_heads", None),
+                "pos": (None, "batch", "kv_seq"),
+            }
+        else:
+            blocks[f"sub{i}"] = {
+                "conv": (None, "batch", None, "mlp"),
+                "h": (None, "batch", "mlp", None),
+            }
+    return blocks
+
+
+def cache_pspecs(cfg: ModelConfig, rules):
+    axes = cache_axes(cfg)
+    return jax.tree_util.tree_map(
+        lambda ax: rules.spec(*ax), axes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, tokens=None, embeds=None,
+    max_len: int | None = None,
+):
+    """Process the prompt; return (last-position logits [B, V], cache).
+
+    max_len sizes the cache (>= prompt length); decode steps beyond it
+    roll (window semantics).  Default: prompt length + 64 decode slots.
+    """
+    b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cache = init_cache(cfg, b, max_len if max_len is not None else s + 64)
+    h = _embed_in(params, cfg, tokens, embeds)
+    h, new_cache, _ = _stack(cfg, params, h, positions, cache, None, False)
+    h = L.apply_norm(params["final_norm"], cfg, h[:, -1:, :])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h, _lm_head(params, cfg), preferred_element_type=F32
+    )[:, 0]
+    return shard(logits, "batch", "vocab"), new_cache
+
+
+def decode(params: Params, cfg: ModelConfig, cache, tokens, pos):
+    """One decode step.
+
+    tokens: [B, 1] int32 (or embeds [B, 1, D] when cfg.embeds_input);
+    pos: scalar int32 — the absolute position of the new token (uniform
+    across the batch; per-row offsets are handled by the serving engine).
+    Returns (logits [B, V], new_cache).
+    """
+    if cfg.embeds_input and tokens.ndim == 3:
+        h = tokens.astype(cfg.jax_dtype)
+        b = h.shape[0]
+    else:
+        b = tokens.shape[0]
+        h = jnp.take(params["embed"], tokens, axis=0)
+    h = shard(h, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32)[None, None], (b, 1)
+    )
+    h, new_cache, _ = _stack(cfg, params, h, positions, cache, pos, False)
+    h = L.apply_norm(params["final_norm"], cfg, h)
+    if cfg.cam_head:
+        from repro.models import binary_lm
+
+        logits = binary_lm.cam_head_logits(params["cam_head"], cfg, h[:, 0])
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", h, _lm_head(params, cfg),
+            preferred_element_type=F32,
+        )[:, 0]
+    return shard(logits, "batch", "vocab"), new_cache

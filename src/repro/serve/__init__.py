@@ -1,0 +1,10 @@
+"""Serving substrate: prefill/decode steps and the batched engine."""
+
+from repro.serve.steps import (  # noqa: F401
+    decode_step,
+    greedy_sample,
+    make_decode_step,
+    make_prefill_step,
+    prefill_step,
+    temperature_sample,
+)

@@ -1,0 +1,54 @@
+"""Jitted serving steps: prefill and single-token decode.
+
+These are the functions the multi-pod dry-run lowers for the decode_32k /
+long_500k / prefill_32k cells, and the building blocks of serve/engine.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+def prefill_step(cfg: ModelConfig, params, batch, max_len: int | None = None):
+    """batch: {"tokens" [B,S]} or {"embeds" [B,S,D]} ->
+    (last-token logits [B,V], cache sized max_len or S+64)."""
+    if cfg.embeds_input:
+        return M.prefill(params, cfg, embeds=batch["embeds"], max_len=max_len)
+    return M.prefill(params, cfg, tokens=batch["tokens"], max_len=max_len)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One token for every sequence in the batch.
+
+    tokens: [B, 1] int32 (or [B, 1, D] embeds); pos: scalar int32.
+    Returns (logits [B, V], new_cache)."""
+    return M.decode(params, cfg, cache, tokens, pos)
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key, logits, temperature: float = 1.0):
+    if temperature <= 0.0:
+        return greedy_sample(logits)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def make_prefill_step(
+    cfg: ModelConfig, donate: bool = False, max_len: int | None = None
+):
+    return jax.jit(functools.partial(prefill_step, cfg, max_len=max_len))
+
+
+def make_decode_step(cfg: ModelConfig, donate: bool = True):
+    return jax.jit(
+        functools.partial(decode_step, cfg),
+        donate_argnums=(1,) if donate else (),
+    )

@@ -1,0 +1,17 @@
+"""Logical-axis based sharding: models annotate tensors with *logical*
+axis names; a rule set maps those to physical mesh axes per run mode."""
+
+from repro.sharding.rules import (  # noqa: F401
+    AxisRules,
+    TRAIN_RULES,
+    TRAIN_SP_RULES,
+    ZERO1_PARAM_RULES,
+    SERVE_RULES,
+    SERVE_SEQCACHE_RULES,
+    LONG_CONTEXT_RULES,
+    current_rules,
+    logical_to_spec,
+    sanitize_spec,
+    shard,
+    use_rules,
+)

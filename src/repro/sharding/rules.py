@@ -1,0 +1,293 @@
+"""Logical-axis -> physical-mesh-axis rules (the GSPMD contract).
+
+Models never name physical mesh axes; they annotate tensors with logical
+axes ("batch", "embed", "heads", "mlp", "expert", "vocab", "kv_seq", ...).
+A rule set maps logical names to physical mesh axes (or None = replicate).
+This keeps one model definition valid across every parallelism layout:
+swap the rules, not the model.
+
+Physical mesh axes (launch/mesh.py):
+  pod    — slowest (DCN) axis across pods; data-parallel only
+  data   — intra-pod axis used for DP + FSDP (+ sequence sharding in
+           long-context serving)
+  model  — intra-pod tensor-parallel axis (heads / mlp / vocab / experts)
+
+Baseline rule sets:
+  TRAIN_RULES        — DP+FSDP over ('pod','data'), Megatron TP over 'model'
+  SERVE_RULES        — batch over ('pod','data'), TP over 'model'
+  LONG_CONTEXT_RULES — batch=1: KV sequence sharded over 'data' (sequence
+                       parallelism for the half-meg context), TP otherwise
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None, tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping from logical axis names to physical mesh axes."""
+
+    name: str
+    rules: dict[str, Axis]
+
+    def resolve(self, mesh: Mesh) -> "AxisRules":
+        """Drop physical axes that don't exist in `mesh` (e.g. 'pod' on a
+        single-pod mesh) so one rule set serves both mesh shapes."""
+        names = set(mesh.axis_names)
+
+        def filt(ax: Axis) -> Axis:
+            if ax is None:
+                return None
+            if isinstance(ax, tuple):
+                keep = tuple(a for a in ax if a in names)
+                return keep if keep else None
+            return ax if ax in names else None
+
+        return AxisRules(
+            name=f"{self.name}@{'x'.join(map(str, mesh.devices.shape))}",
+            rules={k: filt(v) for k, v in self.rules.items()},
+        )
+
+    def physical(self, logical: Optional[str]) -> Axis:
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+    def spec(self, *logical_axes: Optional[str]) -> P:
+        phys = []
+        used: set[str] = set()
+        for ax in logical_axes:
+            p = self.physical(ax)
+            # one physical axis may appear at most once per spec; later
+            # logical axes that map to an already-used physical axis
+            # degrade to replication (GSPMD requirement)
+            if p is None:
+                phys.append(None)
+            elif isinstance(p, tuple):
+                keep = tuple(a for a in p if a not in used)
+                used.update(keep)
+                phys.append(keep if keep else None)
+            else:
+                if p in used:
+                    phys.append(None)
+                else:
+                    used.add(p)
+                    phys.append(p)
+        return P(*phys)
+
+
+# ---------------------------------------------------------------------------
+# Baseline rule sets
+# ---------------------------------------------------------------------------
+TRAIN_RULES = AxisRules(
+    name="train",
+    rules={
+        # activations
+        "batch": ("pod", "data"),
+        "seq": None,
+        "act_seq": None,  # residual-carry sequence dim (SP variant)
+        "kv_seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        # second sharding dim of the [E, C, D] dispatch buffers: when the
+        # expert count doesn't divide the model axis (mixtral: 8 experts
+        # vs 16-way TP) the expert dim degrades to replication and the
+        # capacity dim carries the sharding instead
+        "capacity": "data",
+        # parameters: TP on one dim, FSDP ('data') on another
+        "p_embed_v": "model",  # embedding table rows (vocab)
+        "p_embed_d": "data",  # embedding table cols (FSDP)
+        "p_attn_d": "data",  # attention proj d_model dim (FSDP)
+        "p_attn_heads": "model",  # attention heads dim (TP)
+        "p_mlp_d": "data",  # mlp d_model dim (FSDP)
+        "p_mlp_f": "model",  # mlp hidden dim (TP)
+        "p_expert": None,  # expert dim of MoE weight stacks
+        "p_vocab": "model",  # lm head vocab dim (TP)
+        "p_ssm_inner": "model",  # mamba d_inner dim (TP)
+        "p_ssm_d": "data",  # mamba d_model dim (FSDP)
+    },
+)
+
+SERVE_RULES = AxisRules(
+    name="serve",
+    rules={
+        "batch": ("pod", "data"),
+        "seq": None,
+        "kv_seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "capacity": "data",  # see TRAIN_RULES note
+        # serving uses 2D weight sharding: TP on 'model' plus a second
+        # shard over 'data' (weight-gathered serving).  At the assigned
+        # batch sizes (32-128) serving is throughput-bound, so the
+        # per-layer all-gather amortizes over the batch; without it the
+        # 400B-class archs cannot fit a single pod's HBM (llama3-405b
+        # bf16 = 810 GB vs 16 GB/chip x 16-way TP = 50 GB/chip).
+        "p_embed_v": "model",
+        "p_embed_d": "data",
+        "p_attn_d": "data",
+        "p_attn_heads": "model",
+        "p_mlp_d": "data",
+        "p_mlp_f": "model",
+        "p_expert": "data",  # expert-parallel over the batch axis
+        "p_vocab": "model",
+        "p_ssm_inner": "model",
+        "p_ssm_d": "data",
+    },
+)
+
+LONG_CONTEXT_RULES = AxisRules(
+    name="long_context",
+    rules={
+        **SERVE_RULES.rules,
+        # batch == 1: spend the 'data' axis on the KV sequence instead
+        "batch": "pod",
+        "kv_seq": "data",
+    },
+)
+
+# ---------------------------------------------------------------------------
+# Hillclimb variants (§Perf) — same model code, different rules
+# ---------------------------------------------------------------------------
+
+# Megatron-style sequence parallelism: the residual carries between scanned
+# blocks are sharded over 'model' along the sequence; GSPMD inserts the
+# all-gather at attention/MLP entry and the reduce-scatter at exit.  Cuts
+# the dominant training-memory term (L x B x S x D carries) by the TP width.
+TRAIN_SP_RULES = AxisRules(
+    name="train_sp",
+    rules={**TRAIN_RULES.rules, "act_seq": "model"},
+)
+
+# ZeRO-1: optimizer state sharded over 'data' (as in TRAIN_RULES) but the
+# bf16 working parameters REPLICATED across 'data' — removes the per-
+# microbatch FSDP all-gathers; gradients all-reduce once, the post-update
+# parameter all-gather happens once per step.  Wins when grad-accumulation
+# would otherwise repeat the weight gathers (collective-bound train cells).
+ZERO1_PARAM_RULES = AxisRules(
+    name="zero1_params",
+    rules={
+        **TRAIN_RULES.rules,
+        "p_embed_d": None,
+        "p_attn_d": None,
+        "p_mlp_d": None,
+        "p_ssm_d": None,
+    },
+)
+
+# Sequence-sharded decode cache: for MHA archs whose kv-head count doesn't
+# divide the TP axis (musicgen: 24 kv heads vs 16), the head-sharded cache
+# degrades to replication; sharding the cache SEQUENCE over 'model' instead
+# restores the 16x memory split at the cost of a small per-step all-reduce.
+SERVE_SEQCACHE_RULES = AxisRules(
+    name="serve_seqcache",
+    rules={**SERVE_RULES.rules, "kv_seq": "model"},
+)
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop partitioned dims that don't divide evenly.
+
+    GSPMD requires input dims to be divisible by their tiling factor.
+    Indivisible dims degrade to replication — the standard fallback
+    (e.g. Megatron replicates KV heads when tp > n_kv_heads).  Cases
+    where this costs real compute (q-heads % 16 != 0: llama4's 40,
+    musicgen's 24) are called out in EXPERIMENTS.md §Perf as hillclimb
+    targets (head padding / mesh refactor)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        factor = 1
+        for a in axes:
+            factor *= sizes.get(a, 1)
+        out.append(ax if factor and dim % factor == 0 else None)
+    return P(*out)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: Optional[AxisRules] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules, mesh: Optional[Mesh] = None):
+    """Activate a rule set (and optionally a mesh) for model tracing."""
+    prev = (_CTX.rules, _CTX.mesh)
+    _CTX.rules, _CTX.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _CTX.rules
+
+
+def logical_axis_size(logical: str) -> int:
+    """Product of mesh-axis sizes a logical axis maps to (1 outside a
+    rules+mesh context) — used for shard-local algorithm layouts (e.g.
+    the MoE dispatch groups tokens by data shard)."""
+    rules, mesh = _CTX.rules, _CTX.mesh
+    if rules is None or mesh is None:
+        return 1
+    ax = rules.physical(logical)
+    if ax is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def logical_to_spec(*logical_axes: Optional[str]) -> P:
+    rules = _CTX.rules
+    if rules is None:
+        return P(*([None] * len(logical_axes)))
+    return rules.spec(*logical_axes)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op outside rules
+    context or when no mesh is active). Indivisible dims degrade to
+    replication via sanitize_spec."""
+    rules = _CTX.rules
+    if rules is None:
+        return x
+    spec = rules.spec(*logical_axes)
+    mesh = _CTX.mesh
+    if mesh is not None:
+        spec = sanitize_spec(spec, x.shape, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    # inside jit with an ambient mesh (jax.sharding.use_mesh) this form works
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

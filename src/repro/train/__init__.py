@@ -1,0 +1,6 @@
+"""Training substrate: AdamW, microbatched train step, 1-bit gradient
+compression (EF-signSGD)."""
+
+from repro.train.optimizer import OptimizerConfig, init_opt_state, apply_updates  # noqa: F401
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step, train_step  # noqa: F401
+from repro.train.grad_compress import CompressionConfig  # noqa: F401

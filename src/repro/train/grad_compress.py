@@ -1,0 +1,98 @@
+"""1-bit gradient compression: error-feedback signSGD (EF-signSGD).
+
+Thematic tie to the paper: PiC-BNN binarizes weights and activations;
+EF-signSGD binarizes the *gradient exchange* — each tensor is reduced to
+sign bits plus one f32 scale, with the quantization error fed back into
+the next step's gradient (Karimireddy et al. 2019).  On a 2-pod mesh the
+cross-pod (DCN) gradient traffic drops ~32x — DCN is the scarce resource
+at multi-pod scale, exactly as the matchline was the scarce resource in
+silicon.
+
+Implementation notes:
+  * the error-feedback residual lives in the train state implicitly via
+    closure-free functional form: compress() takes and returns the
+    residual pytree;
+  * `maybe_compress_grads` is the train_step hook: identity when off;
+  * compression is applied AFTER the data-parallel mean (GSPMD inserts
+    the intra-pod reduce), modeling sign-compression of the slow (pod)
+    axis exchange.  The simulation is numerically faithful: values are
+    quantized exactly as the wire format would carry them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    # per-tensor scale: "mean_abs" (signSGD-SI) or "l2" (scaled-sign)
+    scale: str = "mean_abs"
+
+
+def sign_compress(x, scale: str = "mean_abs"):
+    """x -> (sign bits as +-1 in x.dtype, scalar scale)."""
+    xf = x.astype(jnp.float32)
+    if scale == "mean_abs":
+        s = jnp.mean(jnp.abs(xf))
+    else:
+        s = jnp.linalg.norm(xf) / jnp.sqrt(jnp.maximum(xf.size, 1))
+    return jnp.where(xf >= 0, 1.0, -1.0), s
+
+
+def sign_decompress(bits, s, dtype=jnp.float32):
+    return (bits * s).astype(dtype)
+
+
+def compress_with_feedback(grads, residual, scale: str = "mean_abs"):
+    """EF-signSGD: quantize (grad + residual); return (g_hat, new_residual)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        bits, s = sign_compress(gf, scale)
+        g_hat = sign_decompress(bits, s)
+        return g_hat, gf - g_hat
+
+    out = jax.tree_util.tree_map(one, grads, residual)
+    g_hat = jax.tree_util.tree_map(
+        lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_res = jax.tree_util.tree_map(
+        lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return g_hat, new_res
+
+
+def init_residual(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def maybe_compress_grads(cfg: CompressionConfig, grads):
+    """Stateless hook used by train_step (residual-free scaled-sign).
+
+    The residual-carrying variant (compress_with_feedback) is used by the
+    supervisor loop which owns the residual state; inside the plain
+    train_step we apply scaled-sign without feedback when enabled.
+    """
+    if not cfg.enabled:
+        return grads, {}
+    def one(g):
+        bits, s = sign_compress(g, cfg.scale)
+        return sign_decompress(bits, s, jnp.float32)
+    g_hat = jax.tree_util.tree_map(one, grads)
+    return g_hat, {"compressed": jnp.ones((), jnp.float32)}
+
+
+def compression_ratio(params) -> float:
+    """Wire-format ratio vs f32: 1 bit/element + 4 bytes/tensor."""
+    leaves = jax.tree_util.tree_leaves(params)
+    raw = sum(x.size * 4 for x in leaves)
+    packed = sum(-(-x.size // 8) + 4 for x in leaves)
+    return raw / packed

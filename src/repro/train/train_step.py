@@ -1,0 +1,95 @@
+"""The jitted training step: loss -> grads -> (compressed) all-reduce ->
+AdamW update.  One definition serves real training, the smoke tests, and
+the multi-pod dry-run (lowered with ShapeDtypeStructs).
+
+Microbatching: the global batch can be split into `microbatches` grad-
+accumulation steps (a lax.scan over microbatch slices) — activation
+memory scales with the microbatch, gradients accumulate in f32.
+
+Gradient compression (train/grad_compress.py): optional 1-bit EF-signSGD
+on the cross-pod (DCN) gradient reduction — thematically the paper's
+binarization applied to gradients; 32x less DCN traffic at <1% quality
+cost on the scales tested (see tests/test_grad_compress.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train import optimizer as O
+from repro.train.grad_compress import CompressionConfig, maybe_compress_grads
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: O.OptimizerConfig = O.OptimizerConfig()
+    microbatches: int = 1
+    moe_aux_weight: float = 0.01
+    compression: CompressionConfig = CompressionConfig()
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    params = M.init_params(cfg, key)
+    return {"params": params, "opt": O.init_opt_state(tcfg.opt, params)}
+
+
+def _split_microbatches(batch: dict, n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by {n} microbatches"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def loss_and_grads(cfg: ModelConfig, tcfg: TrainConfig, params, batch):
+    """Gradient accumulation over microbatches (scan) or a single pass."""
+    lfn = lambda p, b: M.loss_fn(p, cfg, b, aux_weight=tcfg.moe_aux_weight)
+    grad_fn = jax.value_and_grad(lfn, has_aux=True)
+    if tcfg.microbatches <= 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, grads, metrics
+    mb = _split_microbatches(batch, tcfg.microbatches)
+    g0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+    def body(carry, mbatch):
+        loss_sum, g_acc = carry
+        (loss, metrics), grads = grad_fn(params, mbatch)
+        g_acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+        )
+        return (loss_sum + loss, g_acc), metrics
+
+    (loss_sum, g_acc), metrics = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), g0), mb
+    )
+    inv = 1.0 / tcfg.microbatches
+    grads = jax.tree_util.tree_map(lambda g: g * inv, g_acc)
+    metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+    return loss_sum * inv, grads, metrics
+
+
+def train_step(cfg: ModelConfig, tcfg: TrainConfig, state, batch):
+    """state: {"params", "opt"}; batch: {"tokens"/"embeds", "labels"}."""
+    params = state["params"]
+    loss, grads, metrics = loss_and_grads(cfg, tcfg, params, batch)
+    grads, comp_metrics = maybe_compress_grads(tcfg.compression, grads)
+    new_params, new_opt, opt_metrics = O.apply_updates(
+        tcfg.opt, params, grads, state["opt"]
+    )
+    metrics = {"loss": loss, **metrics, **opt_metrics, **comp_metrics}
+    return {"params": new_params, "opt": new_opt}, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, donate: bool = True):
+    fn = functools.partial(train_step, cfg, tcfg)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,9 @@
+import os
+
+# Tests run against the real host device topology (1 CPU device here) —
+# only launch/dryrun.py forces the 512-device placeholder platform.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

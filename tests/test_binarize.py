@@ -1,0 +1,87 @@
+"""Property tests for the binarization primitives (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize as B
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+bits_arrays = st.integers(1, 200).flatmap(
+    lambda k: st.integers(1, 8).map(lambda n: (n, k))
+)
+
+
+@given(bits_arrays, st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(shape, seed):
+    n, k = shape
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (n, k)).astype(np.uint8)
+    packed = B.pack_bits(jnp.asarray(bits))
+    assert packed.shape == (n, B.packed_width(k))
+    un = B.unpack_bits(packed, k)
+    np.testing.assert_array_equal(np.asarray(un), bits)
+
+
+@given(bits_arrays, st.integers(0, 2**31 - 1))
+def test_hamming_packed_equals_dense(shape, seed):
+    n, k = shape
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2, (n, k)).astype(np.uint8)
+    b = rng.integers(0, 2, (n, k)).astype(np.uint8)
+    hd_dense = (a != b).sum(-1)
+    hd_packed = B.hamming_packed(B.pack_bits(jnp.asarray(a)),
+                                 B.pack_bits(jnp.asarray(b)))
+    np.testing.assert_array_equal(np.asarray(hd_packed), hd_dense)
+
+
+@given(st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_dot_from_hd_identity(k, seed):
+    """<a, b> in +-1 equals n - 2*HD for every pair."""
+    rng = np.random.default_rng(seed)
+    a = rng.choice([-1.0, 1.0], (4, k))
+    b = rng.choice([-1.0, 1.0], (3, k))
+    hd = B.hamming_pm1(jnp.asarray(a)[:, None, :], jnp.asarray(b)[None, :, :])
+    dot = a @ b.T
+    np.testing.assert_array_equal(
+        np.asarray(B.dot_from_hd(hd, k)), dot.astype(np.int64)
+    )
+
+
+def test_sign_ste_forward_and_grad():
+    x = jnp.array([-2.0, -0.5, 0.0, 0.7, 1.5])
+    y = B.sign_ste(x)
+    np.testing.assert_array_equal(np.asarray(y), [-1, -1, 1, 1, 1])
+    g = jax.grad(lambda x: B.sign_ste(x).sum())(x)
+    # clipped STE: gradient passes iff |x| <= 1
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+def test_np_pack_matches_jnp():
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, (5, 77)).astype(np.uint8)
+    np.testing.assert_array_equal(
+        B.np_pack_bits(bits), np.asarray(B.pack_bits(jnp.asarray(bits)))
+    )
+
+
+@given(st.integers(1, 100))
+def test_packed_width(k):
+    assert B.packed_width(k) == (k + 31) // 32
+
+
+def test_binary_matvec_packed():
+    rng = np.random.default_rng(1)
+    w = rng.choice([-1.0, 1.0], (10, 96))
+    x = rng.choice([-1.0, 1.0], (4, 96))
+    y = B.binary_matvec_packed(
+        B.pack_bits(jnp.asarray((w > 0).astype(np.uint8))),
+        B.pack_bits(jnp.asarray((x > 0).astype(np.uint8))),
+        96,
+    )
+    np.testing.assert_array_equal(np.asarray(y), (x @ w.T).astype(np.int64))

@@ -1,0 +1,100 @@
+"""End-to-end paper pipeline: train binary MLP -> fold BN -> deploy to
+CAM -> Algorithm 1 inference.  The reproduction's accuracy claims in
+miniature (the full Fig. 5 sweep lives in benchmarks/)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bnn, ensemble, mapping
+from repro.data.synthetic import MNIST_LIKE, binarize_images, make_dataset
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = bnn.MLPConfig(layer_sizes=(784, 64, 10), bias_cells=64)
+    tx, ty, vx, vy = make_dataset(MNIST_LIKE, n_train=3000, n_test=600,
+                                  seed=0)
+    txb, vxb = binarize_images(tx), binarize_images(vx)
+    params = bnn.train_mlp(
+        jax.random.PRNGKey(0), cfg, txb, ty, epochs=6, batch=128, lr=2e-3
+    )
+    return cfg, params, txb, ty, vxb, vy
+
+
+def test_software_baseline_accuracy(trained):
+    cfg, params, txb, ty, vxb, vy = trained
+    acc = bnn.eval_accuracy(params, cfg, vxb, vy, topk=(1, 2))
+    assert acc["top1"] > 0.85, acc  # synthetic 10-class task is learnable
+    assert acc["top2"] >= acc["top1"]
+
+
+def test_fold_preserves_decisions(trained):
+    """Eq. (3): folded integer network reproduces the BN-eval forward's
+    hidden activations and logit ranking."""
+    cfg, params, txb, ty, vxb, vy = trained
+    folded = bnn.fold(params, cfg)
+    x = jnp.asarray(vxb[:256])
+    pre = bnn.folded_forward_exact(folded, x)
+    logits, _ = bnn.forward(params, x, cfg)
+    agree = (jnp.argmax(pre, -1) == jnp.argmax(logits, -1)).mean()
+    # C_j is clipped to +-bias_cells and rounded: ranking agreement is
+    # high but not exact by construction
+    assert float(agree) > 0.9, float(agree)
+
+
+def test_cam_deployment_matches_folded_oracle(trained):
+    cfg, params, txb, ty, vxb, vy = trained
+    folded = bnn.fold(params, cfg)
+    mapped = [mapping.map_layer(l, cfg.bias_cells) for l in folded]
+    x = jnp.asarray(vxb[:128])
+    h = x
+    for ml, fl in zip(mapped[:-1], folded[:-1]):
+        h = mapping.layer_forward(ml, h, "exact")
+    # the deployed hidden activations equal the folded oracle's, after
+    # the CAM's parity quantization of C_j (1 LSB toward zero)
+    c = folded[0].c.copy()
+    odd = (c + cfg.bias_cells) % 2 != 0
+    c = np.where(odd, c - np.sign(c), c)
+    oracle_h = jnp.where(
+        x @ jnp.asarray(folded[0].weights_pm1.T, jnp.float32)
+        + jnp.asarray(c, jnp.float32) >= 0, 1.0, -1.0,
+    )
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(oracle_h))
+
+
+def test_algorithm1_end_to_end_accuracy(trained):
+    """The paper's claim: the binary ensemble reaches the software
+    baseline accuracy (within noise) with 33 passes."""
+    cfg, params, txb, ty, vxb, vy = trained
+    folded = bnn.fold(params, cfg)
+    ecfg = ensemble.EnsembleConfig()
+    head = ensemble.build_head(folded[-1], ecfg)
+    mapped = [mapping.map_layer(l, cfg.bias_cells) for l in folded[:-1]]
+    h = jnp.asarray(vxb)
+    for ml in mapped:
+        h = mapping.layer_forward(ml, h, "exact")
+    pred = ensemble.predict(head, h, ecfg)
+    acc_cam = float((pred == jnp.asarray(vy)).mean())
+    acc_sw = bnn.eval_accuracy(params, cfg, vxb, vy)["top1"]
+    assert acc_cam > acc_sw - 0.05, (acc_cam, acc_sw)
+
+
+def test_hierarchical_mode_accuracy_gap_bounded(trained):
+    """The strictly-binary tiled-majority input layer costs accuracy;
+    the gap is quantified (DESIGN.md ambiguity resolution)."""
+    cfg, params, txb, ty, vxb, vy = trained
+    folded = bnn.fold(params, cfg)
+    ecfg = ensemble.EnsembleConfig()
+    head = ensemble.build_head(folded[-1], ecfg)
+    mapped = [mapping.map_layer(l, cfg.bias_cells) for l in folded[:-1]]
+    accs = {}
+    for mode in ("exact", "hierarchical"):
+        h = jnp.asarray(vxb)
+        for ml in mapped:
+            h = mapping.layer_forward(ml, h, mode)
+        pred = ensemble.predict(head, h, ecfg)
+        accs[mode] = float((pred == jnp.asarray(vy)).mean())
+    assert accs["hierarchical"] > 0.3  # binary-only stays far above chance
+    assert accs["exact"] >= accs["hierarchical"] - 0.02

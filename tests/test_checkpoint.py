@@ -1,0 +1,107 @@
+"""Checkpoint semantics: roundtrip, atomicity, async, retention, elastic."""
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+            "blocks": {"scale": jnp.asarray(rng.normal(size=(3, 4)))},
+        },
+        "opt": {"step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(tmp_path, 3, t)
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t
+    )
+    restored, step = restore(tmp_path, None, template)
+    assert step == 3
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_and_retention(tmp_path):
+    t = _tree()
+    for s in [1, 2, 3, 4, 5]:
+        save(tmp_path, s, t, keep_last=2)
+    assert latest_step(tmp_path) == 5
+    kept = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert kept == ["step_00000004", "step_00000005"]
+
+
+def test_atomicity_tmp_dirs_invisible(tmp_path):
+    t = _tree()
+    save(tmp_path, 1, t)
+    # a stale tmp dir (crash artifact) must not be seen as a checkpoint
+    (tmp_path / ".step_00000009.tmp-dead").mkdir()
+    assert latest_step(tmp_path) == 1
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    save(tmp_path, 1, t)
+    bad = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(
+            ((x.shape[0] + 1,) + x.shape[1:]) if x.ndim else x.shape, x.dtype
+        ),
+        t,
+    )
+    bad["params"]["w"] = jax.ShapeDtypeStruct((9, 9), jnp.float32)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore(tmp_path, 1, bad)
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    t = _tree()
+    save(tmp_path, 1, t)
+    template = {**t, "extra": jnp.zeros(3)}
+    with pytest.raises(KeyError):
+        restore(tmp_path, 1, template)
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(tmp_path, keep_last=2)
+    t = _tree()
+    ck.save_async(10, t)
+    ck.wait()
+    assert latest_step(tmp_path) == 10
+    # second save while idle
+    ck.save_async(20, t)
+    ck.wait()
+    assert latest_step(tmp_path) == 20
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore against explicit (single-device) shardings — the elastic
+    path: arrays are device_put against the new mesh's shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    t = _tree()
+    save(tmp_path, 2, t)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P()), t
+    )
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t
+    )
+    restored, step = restore(tmp_path, 2, template, sh)
+    assert step == 2
+    leaf = jax.tree_util.tree_leaves(restored)[0]
+    assert leaf.sharding.mesh.axis_names == ("data", "model")

@@ -1,0 +1,136 @@
+"""Dry-run machinery on a 1x1 mesh (unit-level; the 512-device sweep runs
+via `python -m repro.launch.dryrun` and its results are validated here)."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES, ShapeConfig, applicable_shapes
+from repro.launch import specs
+from repro.launch.roofline import derive, model_flops
+from repro.sharding import SERVE_RULES, TRAIN_RULES
+from repro.serve.steps import decode_step, prefill_step
+from repro.train import TrainConfig
+from repro.train.train_step import train_step
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+SMALL_TRAIN = ShapeConfig("train_4k", "train", 64, 4)
+SMALL_PREFILL = ShapeConfig("prefill_32k", "prefill", 64, 2)
+SMALL_DECODE = ShapeConfig("decode_32k", "decode", 64, 2)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "jamba-v0.1-52b"])
+def test_lower_train_cell_smoke_mesh(arch, mesh):
+    import functools
+
+    from repro.sharding import use_rules
+
+    cfg = configs.get_config(arch + "+smoke")
+    rules = TRAIN_RULES.resolve(mesh)
+    tcfg = TrainConfig()
+    with use_rules(rules, mesh):
+        state, batch = specs.train_cell_args(cfg, SMALL_TRAIN, mesh, rules, tcfg)
+        lowered = jax.jit(
+            functools.partial(train_step, cfg, tcfg), donate_argnums=(0,)
+        ).lower(state, batch)
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    assert ma.argument_size_in_bytes > 0
+    assert compiled.cost_analysis()["flops"] > 0
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b"])
+def test_lower_decode_cell_smoke_mesh(arch, mesh):
+    import functools
+
+    from repro.sharding import use_rules
+
+    cfg = configs.get_config(arch + "+smoke")
+    rules = SERVE_RULES.resolve(mesh)
+    with use_rules(rules, mesh):
+        args = specs.decode_cell_args(cfg, SMALL_DECODE, mesh, rules)
+        lowered = jax.jit(
+            functools.partial(decode_step, cfg), donate_argnums=(1,)
+        ).lower(*args)
+    assert lowered.compile() is not None
+
+
+def test_input_specs_cover_all_kinds():
+    cfg = configs.get_config("llama3.2-1b")
+    for s in SHAPES.values():
+        sp = specs.input_specs(cfg, s)
+        assert all(isinstance(v, jax.ShapeDtypeStruct) for v in sp.values())
+        if s.kind == "train":
+            assert sp["tokens"].shape == (s.global_batch, s.seq_len)
+            assert sp["labels"].shape == (s.global_batch, s.seq_len)
+        if s.kind == "decode":
+            assert sp["tokens"].shape == (s.global_batch, 1)
+    vlm = configs.get_config("chameleon-34b")
+    sp = specs.input_specs(vlm, SHAPES["prefill_32k"])
+    assert sp["embeds"].shape == (32, 32768, vlm.d_model)  # frontend stub
+
+
+def test_model_flops_scaling_laws():
+    cfg = configs.get_config("llama3.2-1b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    de = model_flops(cfg, SHAPES["decode_32k"])
+    # train matmul flops ~ 6 N D (the classic estimate), within 25%
+    n = cfg.param_count()
+    ratio = tr["matmul"] / (6.0 * n * SHAPES["train_4k"].tokens)
+    assert 0.75 < ratio < 1.25, ratio
+    # per-token attention: decode reads the FULL cache (S), prefill
+    # averages S/2 under causal masking -> exactly a 2x ratio
+    de_att = de["attention"] / de["tokens"]
+    pf_att = pf["attention"] / pf["tokens"]
+    assert de_att == pytest.approx(2.0 * pf_att, rel=0.01)
+    # total step flops: decode (1 token/seq) << prefill (S tokens/seq)
+    assert de["total"] < pf["total"] / 100
+
+
+def test_roofline_derive_bottleneck_logic():
+    cfg = configs.get_config("llama3.2-1b")
+    rep = derive(cfg, SHAPES["train_4k"], 256,
+                 device_flops=1e12, device_hbm_bytes=1e9,
+                 device_wire_bytes=1e6)
+    assert rep.bottleneck == "compute"
+    rep = derive(cfg, SHAPES["train_4k"], 256,
+                 device_flops=1e9, device_hbm_bytes=1e12,
+                 device_wire_bytes=1e6)
+    assert rep.bottleneck == "memory"
+    assert 0.0 <= rep.roofline_fraction <= 1.0
+
+
+def test_sweep_results_complete_and_green():
+    """Deliverable (e): every (arch x applicable shape x mesh) compiled."""
+    if not RESULTS.exists():
+        pytest.skip("dry-run sweep not executed in this checkout")
+    missing, failed = [], []
+    for arch in configs.list_archs():
+        cfg = configs.get_config(arch)
+        app = {s.name for s in applicable_shapes(cfg)}
+        for shape in SHAPES:
+            for mesh_tag in ("pod", "multipod"):
+                p = RESULTS / f"{arch}__{shape}__{mesh_tag}.json"
+                if not p.exists():
+                    missing.append(p.name)
+                    continue
+                rec = json.loads(p.read_text())
+                if shape in app and rec.get("status") != "ok":
+                    failed.append(p.name)
+                if shape not in app and rec.get("status") not in (
+                    "skipped", "ok"
+                ):
+                    failed.append(p.name)
+    assert not missing, f"missing cells: {missing[:8]}"
+    assert not failed, f"failed cells: {failed[:8]}"

@@ -1,0 +1,117 @@
+"""Algorithm 1 invariants: the paper's core claims as properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize, bnn, ensemble
+from repro.core.device_model import NoiseModel
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _random_head(seed, n_classes=10, n_in=128):
+    rng = np.random.default_rng(seed)
+    layer = bnn.FoldedLayer(
+        weights_pm1=rng.choice([-1, 1], (n_classes, n_in)).astype(np.int8),
+        c=rng.integers(-30, 31, n_classes),
+    )
+    cfg = ensemble.EnsembleConfig()
+    return ensemble.build_head(layer, cfg), layer, cfg
+
+
+@given(st.integers(0, 1000))
+def test_fused_equals_faithful_noiseless(seed):
+    head, layer, cfg = _random_head(seed)
+    x = binarize.random_pm1(jax.random.PRNGKey(seed), (16, 128))
+    vf = ensemble.votes_faithful(head, x)
+    vz = ensemble.votes_fused(head, x)
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(vz))
+
+
+@given(st.integers(0, 1000))
+def test_votes_monotone_in_hd(seed):
+    """votes_j is a non-increasing function of HD_j (the LLN mechanism)."""
+    head, layer, cfg = _random_head(seed)
+    x = binarize.random_pm1(jax.random.PRNGKey(seed + 1), (8, 128))
+    from repro.core.cam import query_with_bias
+
+    q = query_with_bias(x, head.bias_cells)
+    hd = np.asarray(head.cam.search_hd(q))
+    votes = np.asarray(ensemble.votes_fused(head, x))
+    for b in range(hd.shape[0]):
+        order = np.argsort(hd[b])
+        v_sorted = votes[b][order]
+        assert (np.diff(v_sorted) <= 0).all()
+
+
+@given(st.integers(0, 500))
+def test_argmax_votes_recovers_argmax_logit(seed):
+    """Ties aside (the step-2 sweep quantization), the binary ensemble
+    recovers the full-precision logit ranking — the paper's main claim.
+    The oracle logits use the CAM's parity-quantized C_j (odd C with even
+    bias-cell count rounds 1 LSB toward zero, as in silicon)."""
+    head, layer, cfg = _random_head(seed)
+    x = binarize.random_pm1(jax.random.PRNGKey(seed + 2), (32, 128))
+    c = layer.c.copy()
+    odd = (c + cfg.bias_cells) % 2 != 0
+    c = np.where(odd, c - np.sign(c), c)
+    logits = x @ jnp.asarray(layer.weights_pm1.T, jnp.float32) + jnp.asarray(
+        c, jnp.float32
+    )
+    votes = np.asarray(ensemble.votes_fused(head, x))
+    pred_v = votes.argmax(-1)
+    logits = np.asarray(logits)
+    pred_l = logits.argmax(-1)
+    agree = 0
+    for b in range(32):
+        if pred_v[b] == pred_l[b]:
+            agree += 1
+        else:
+            # disagreement is only legal on a vote tie caused by the
+            # sweep's step-2 quantization of HD
+            assert votes[b, pred_v[b]] == votes[b, pred_l[b]]
+    assert agree >= 24  # ties are rare
+
+
+def test_noise_degrades_gracefully():
+    """Under PVT noise the multi-pass majority still tracks the ranking
+    (LLN); single-pass matching does not."""
+    head, layer, cfg = _random_head(7)
+    key = jax.random.PRNGKey(0)
+    x = binarize.random_pm1(key, (256, 128))
+    logits = np.asarray(
+        x @ jnp.asarray(layer.weights_pm1.T, jnp.float32)
+        + jnp.asarray(layer.c, jnp.float32)
+    )
+    gold = logits.argmax(-1)
+    noise = NoiseModel(sigma_hd=2.0)
+    v = ensemble.votes_faithful(head, x, noise=noise, key=key)
+    acc_multi = (np.asarray(v).argmax(-1) == gold).mean()
+    assert acc_multi > 0.8
+
+
+def test_accuracy_sweep_reports_all_pass_counts():
+    head, layer, cfg = _random_head(3)
+    x = binarize.random_pm1(jax.random.PRNGKey(5), (64, 128))
+    logits = np.asarray(
+        x @ jnp.asarray(layer.weights_pm1.T, jnp.float32)
+        + jnp.asarray(layer.c, jnp.float32)
+    )
+    labels = logits.argmax(-1)
+    out = ensemble.accuracy_sweep(head, x, labels, cfg)
+    assert set(out) == set(range(1, 34))
+    # with all 33 passes and noiseless compare, top-1 vs own-logit labels
+    # is near-perfect (ties only)
+    assert out[33]["top1"] >= 0.9
+    assert out[33]["top2"] >= out[33]["top1"]
+
+
+def test_kernel_mode_matches_fused():
+    head, layer, cfg = _random_head(11)
+    x = binarize.random_pm1(jax.random.PRNGKey(9), (16, 128))
+    vk = ensemble.votes_kernel(head, x)
+    vz = ensemble.votes_fused(head, x)
+    np.testing.assert_array_equal(np.asarray(vk), np.asarray(vz))

@@ -1,0 +1,138 @@
+"""Fault tolerance: supervisor restart, straggler detection, determinism."""
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step
+from repro.ft import (
+    InjectedFailure,
+    StragglerMonitor,
+    Supervisor,
+    SupervisorConfig,
+    failing_step,
+    rescale_microbatches,
+    slow_step,
+)
+
+
+def _toy_problem():
+    """Deterministic least-squares toy: state is a weight vector."""
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+
+    @jax.jit
+    def step(state, batch):
+        w = state["w"]
+        g = A.T @ (A @ w - b) / 32 + batch["noise"] * 0.0
+        w = w - 0.1 * g
+        loss = 0.5 * jnp.mean((A @ w - b) ** 2)
+        return {"w": w}, {"loss": loss}
+
+    def make_data(start):
+        def gen():
+            s = start
+            while True:
+                yield {"noise": jnp.float32(s)}
+                s += 1
+        return gen()
+
+    init = {"w": jnp.zeros(8)}
+    return step, make_data, init
+
+
+def _run(tmp_path, step_fn, make_data, init, n_steps, **cfg_kw):
+    cfg = SupervisorConfig(
+        ckpt_dir=tmp_path, ckpt_every=5, backoff_s=0.0, **cfg_kw
+    )
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), init
+    )
+    sup = Supervisor(cfg, step_fn, make_data, template)
+    state = sup.run(init, n_steps)
+    return sup, state
+
+
+def test_supervisor_completes_without_failures(tmp_path):
+    step, data, init = _toy_problem()
+    sup, state = _run(tmp_path, step, data, init, 20)
+    assert len(sup.history) == 20
+    assert sup.history[-1]["loss"] < sup.history[0]["loss"]
+
+
+def test_supervisor_survives_injected_failures(tmp_path):
+    step, data, init = _toy_problem()
+    flaky = failing_step(step, fail_at=[7, 13])
+    sup, state = _run(tmp_path, flaky, data, init, 25)
+    assert sup.restarts == 2
+    steps_run = [h["step"] for h in sup.history]
+    assert steps_run[-1] == 24
+    # every step 0..24 executed at least once (replay covers the gaps)
+    assert set(range(25)).issubset(set(steps_run))
+    assert latest_step(tmp_path) is not None
+
+
+def test_supervisor_result_matches_failure_free_run(tmp_path):
+    """Checkpoint/restart + deterministic data replay => same final state."""
+    step, data, init = _toy_problem()
+    _, clean = _run(tmp_path / "clean", step, data, init, 25)
+    flaky = failing_step(step, fail_at=[11])
+    _, faulted = _run(tmp_path / "flaky", flaky, data, init, 25)
+    np.testing.assert_allclose(
+        np.asarray(clean["w"]), np.asarray(faulted["w"]), atol=1e-6
+    )
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    step, data, init = _toy_problem()
+    always = failing_step(step, fail_at=range(0, 1000))
+    cfg = SupervisorConfig(ckpt_dir=tmp_path, ckpt_every=5,
+                           max_restarts=3, backoff_s=0.0)
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), init
+    )
+    sup = Supervisor(cfg, always, data, template)
+    with pytest.raises(InjectedFailure):
+        sup.run(init, 10)
+    assert sup.restarts == 4
+
+
+def test_straggler_monitor_fires_on_sustained_outliers():
+    m = StragglerMonitor(alpha=0.2, z=3.0, patience=2)
+    for s in range(20):
+        m.observe(s, 0.10 + 0.001 * (s % 3))
+    fired = []
+    for s in range(20, 26):
+        if m.observe(s, 0.50):
+            fired.append(s)
+    assert fired, "sustained 5x slowdown must alert"
+
+
+def test_straggler_monitor_ignores_single_blip():
+    m = StragglerMonitor(alpha=0.2, z=3.0, patience=3)
+    for s in range(20):
+        m.observe(s, 0.1)
+    assert not m.observe(20, 0.5)
+    assert not m.observe(21, 0.1)
+    assert m.strikes == 0
+
+
+def test_heartbeat_written(tmp_path):
+    step, data, init = _toy_problem()
+    hb = tmp_path / "heartbeat.json"
+    sup, _ = _run(tmp_path, step, data, init, 5, heartbeat=hb)
+    import json
+
+    assert json.loads(hb.read_text())["step"] == 4
+
+
+def test_rescale_microbatches():
+    # 2 pods (dp=32) with mb=2 -> 1 pod (dp=16): mb doubles
+    assert rescale_microbatches(256, 32, 16, 2) == 4
+    # scale up halves accumulation
+    assert rescale_microbatches(256, 16, 32, 4) == 2

@@ -1,0 +1,96 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels execute in interpret mode on CPU (same semantics as Mosaic/TPU);
+every cell asserts exact equality — these are integer kernels, allclose
+means equal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binarize
+from repro.kernels import ops, ref
+
+
+def _pack(rng, n, k):
+    bits = rng.integers(0, 2, (n, k)).astype(np.uint8)
+    return binarize.pack_bits(jnp.asarray(bits))
+
+
+SHAPES = [
+    (1, 1, 32),
+    (8, 10, 192),
+    (33, 7, 64),
+    (130, 70, 300),
+    (64, 129, 1000),
+    (256, 256, 512),
+]
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+def test_binary_gemm_vs_ref(m, n, k):
+    rng = np.random.default_rng(m * 1000 + n)
+    x, w = _pack(rng, m, k), _pack(rng, n, k)
+    got = ops.binary_gemm_hd(x, w, bm=32, bn=32, chunk=4)
+    want = ref.binary_gemm_hd_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bn,chunk", [(8, 8, 1), (16, 32, 2), (64, 64, 8)])
+def test_binary_gemm_block_shapes(bm, bn, chunk):
+    rng = np.random.default_rng(7)
+    x, w = _pack(rng, 50, 257), _pack(rng, 41, 257)
+    got = ops.binary_gemm_hd(x, w, bm=bm, bn=bn, chunk=chunk)
+    want = ref.binary_gemm_hd_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES[:4])
+def test_binary_gemm_dot_identity(m, n, k):
+    rng = np.random.default_rng(3)
+    xb = rng.integers(0, 2, (m, k)).astype(np.uint8)
+    wb = rng.integers(0, 2, (n, k)).astype(np.uint8)
+    dot = ops.binary_gemm_dot(
+        binarize.pack_bits(jnp.asarray(xb)),
+        binarize.pack_bits(jnp.asarray(wb)),
+        k, bm=32, bn=32, chunk=4,
+    )
+    dense = (2.0 * xb - 1) @ (2.0 * wb - 1).T
+    np.testing.assert_array_equal(np.asarray(dot), dense.astype(np.int64))
+
+
+@pytest.mark.parametrize("b,c,k,p", [
+    (1, 1, 32, 1), (16, 10, 192, 33), (40, 20, 4160, 33), (7, 129, 96, 5),
+])
+def test_cam_vote_vs_ref(b, c, k, p):
+    rng = np.random.default_rng(b * 17 + c)
+    q, rows = _pack(rng, b, k), _pack(rng, c, k)
+    thr = jnp.asarray(
+        rng.integers(0, k + 1, p).astype(np.int32)
+    )
+    got = ops.cam_vote(q, rows, thr, bq=16, bc=16, chunk=4)
+    want = ref.cam_vote_ref(q, rows, thr)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mxu_path_matches_packed_path():
+    rng = np.random.default_rng(0)
+    xb = rng.integers(0, 2, (24, 160)).astype(np.uint8)
+    wb = rng.integers(0, 2, (12, 160)).astype(np.uint8)
+    hd = ops.binary_gemm_hd(
+        binarize.pack_bits(jnp.asarray(xb)),
+        binarize.pack_bits(jnp.asarray(wb)), bm=8, bn=8, chunk=1,
+    )
+    mxu = ops.binary_gemm_mxu(
+        jnp.asarray(2.0 * xb - 1), jnp.asarray((2.0 * wb - 1).T)
+    )
+    np.testing.assert_array_equal(np.asarray(mxu), 160 - 2 * np.asarray(hd))
+
+
+def test_kernel_dtype_of_results():
+    rng = np.random.default_rng(0)
+    q, rows = _pack(rng, 4, 64), _pack(rng, 4, 64)
+    assert ops.binary_gemm_hd(q, rows).dtype == jnp.int32
+    assert ops.cam_vote(q, rows, jnp.arange(3, dtype=jnp.int32)).dtype == jnp.int32

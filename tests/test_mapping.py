@@ -1,0 +1,98 @@
+"""CAM bank mapping: tiling exactness, hierarchical-MAJ semantics, and
+the silicon cycle/energy model vs Table II."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize, bnn, mapping
+from repro.core.device_model import EnergyModel
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _layer(rng, n_out, n_in, cmax=30):
+    return bnn.FoldedLayer(
+        weights_pm1=rng.choice([-1, 1], (n_out, n_in)).astype(np.int8),
+        c=rng.integers(-cmax, cmax + 1, n_out),
+    )
+
+
+@given(st.integers(1, 300), st.integers(5, 900), st.integers(0, 100))
+def test_tiled_exact_equals_oracle(n_out, n_in, seed):
+    rng = np.random.default_rng(seed)
+    layer = _layer(rng, n_out, n_in)
+    ml = mapping.map_layer(layer, bias_cells=64)
+    x = binarize.random_pm1(jax.random.PRNGKey(seed), (4, n_in))
+    got = mapping.layer_forward(ml, x, "exact")
+    # the CAM realizes C_j with parity-matched bias cells: odd (c + B)
+    # quantizes c toward zero (silicon 1-LSB quantization)
+    c = layer.c.copy()
+    odd = (c + 64) % 2 != 0
+    c = np.where(odd, c - np.sign(c), c)
+    want = jnp.where(
+        x @ jnp.asarray(layer.weights_pm1.T, jnp.float32)
+        + jnp.asarray(c, jnp.float32) >= 0, 1.0, -1.0,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_single_tile_hierarchical_equals_exact():
+    """With one column tile, MAJ-of-MAJ degenerates to exact Eq. (3)."""
+    rng = np.random.default_rng(0)
+    layer = _layer(rng, 64, 128)
+    ml = mapping.map_layer(layer, bias_cells=64)
+    assert len(ml.col_tiles) == 1
+    x = binarize.random_pm1(jax.random.PRNGKey(1), (16, 128))
+    a = mapping.layer_forward(ml, x, "exact")
+    b = mapping.layer_forward(ml, x, "hierarchical")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plan_layer_single_cycle_configs():
+    """Paper Sec. V-B: layers up to 256x512 / 128x1024 / 64x2048 execute
+    in one cycle (bias cells ride within the row budget here)."""
+    for n_in, n_out in [(192, 512), (64, 1024), (0, 0)]:
+        if n_in == 0:
+            continue
+        plan = mapping.plan_layer(n_out, n_in, bias_cells=64)
+        assert plan.cycles_per_query == 1, (n_in, n_out, plan)
+
+
+def test_plan_layer_mnist_shapes():
+    # input layer 784 -> 128: 784+64 bias = 848 bits -> 4 tiles of 256
+    p1 = mapping.plan_layer(128, 784, 64)
+    assert p1.cycles_per_query == 4
+    # output layer 128 -> 10: single search
+    p2 = mapping.plan_layer(10, 128, 64)
+    assert p2.cycles_per_query == 1
+
+
+def test_inference_cost_reproduces_paper_throughput():
+    """560K inf/s at 25 MHz for the MNIST MLP with 33 output passes."""
+    plans = [mapping.plan_layer(128, 784, 64), mapping.plan_layer(10, 128, 64)]
+    cost = mapping.model_inference_cost(plans, n_output_passes=33)
+    # 4 cycles input layer + 33 cycles output + amortized tuning
+    ips = cost.inferences_per_s
+    assert 500e3 <= ips <= 700e3, ips  # paper: 560K inf/s
+    # energy efficiency: inferences/J == inferences/s/W (paper: 703M)
+    inf_per_j = 1.0 / cost.energy_j
+    assert 300e6 <= inf_per_j <= 1.5e9, inf_per_j
+
+
+def test_bias_cells_encoding():
+    """C_j realized as 2p - B matching cells (paper Sec. IV example)."""
+    from repro.core.cam import write_weights_with_bias, query_with_bias
+
+    w = np.ones((1, 8), np.int8)
+    for c in [-12, -3, 0, 5, 12]:
+        cam = write_weights_with_bias(w, np.array([c]), bias_cells=12)
+        x = jnp.ones((1, 8))
+        q = query_with_bias(x, 12)
+        hd = int(np.asarray(cam.search_hd(q))[0, 0])
+        dot = (8 + 12) - 2 * hd
+        expect_c = c if (c + 12) % 2 == 0 else c - np.sign(c)
+        assert dot == 8 + expect_c, (c, dot)

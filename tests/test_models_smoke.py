@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned architecture instantiates a REDUCED config of the same
+family (same GQA ratio / MoE routing / hybrid interleave / window
+pattern, tiny widths) and runs one forward + one train step + one
+prefill/decode on CPU, asserting output shapes and finiteness.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.train import TrainConfig, init_train_state
+from repro.train.train_step import train_step
+
+ARCHS = configs.list_archs()
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    labels = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if cfg.embeds_input:
+        return {
+            "embeds": jax.random.normal(key, (b, s, cfg.d_model), jnp.float32),
+            "labels": labels,
+        }
+    return {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "labels": labels,
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = configs.get_config(arch + "+smoke")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    kw = (
+        {"embeds": batch["embeds"]} if cfg.embeds_input
+        else {"tokens": batch["tokens"]}
+    )
+    logits, _ = M.forward(params, cfg, **kw)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = configs.get_config(arch + "+smoke")
+    tcfg = TrainConfig()
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    new_state, metrics = train_step(cfg, tcfg, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    before = jax.tree_util.tree_leaves(state["params"])[0]
+    after = jax.tree_util.tree_leaves(new_state["params"])[0]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+    # loss decreases after repeated steps on the SAME batch (sanity)
+    s = new_state
+    for _ in range(3):
+        s, m2 = train_step(cfg, tcfg, s, batch)
+    assert float(m2["loss"]) < float(metrics["loss"]) + 0.5
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_shapes(arch):
+    cfg = configs.get_config(arch + "+smoke")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+    kw = (
+        {"embeds": batch["embeds"]} if cfg.embeds_input
+        else {"tokens": batch["tokens"]}
+    )
+    logits, cache = M.prefill(params, cfg, **kw)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    tok = (
+        jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model))
+        if cfg.embeds_input
+        else jnp.zeros((b, 1), jnp.int32)
+    )
+    lg, cache2 = M.decode(params, cfg, cache, tok, jnp.int32(s))
+    assert lg.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all())
+    # cache structure preserved
+    jax.tree_util.tree_all(
+        jax.tree_util.tree_map(lambda a, b_: a.shape == b_.shape, cache, cache2)
+    )
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mixtral-8x7b"])
+def test_binary_ffn_variant(arch):
+    cfg = configs.get_config(arch + "+smoke+binary-ffn")
+    assert cfg.binary_ffn
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, metrics = M.loss_fn(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: M.loss_fn(p, cfg, batch)[0])(params)
+    gn = sum(
+        float(jnp.abs(g).sum()) for g in jax.tree_util.tree_leaves(grads)
+    )
+    assert np.isfinite(gn) and gn > 0  # STE passes gradients
+
+
+@pytest.mark.parametrize("arch", ["musicgen-medium"])
+def test_cam_head_variant(arch):
+    cfg = configs.get_config(arch + "+smoke+cam-head")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 8
+    batch = _batch(cfg, b, s)
+    logits, cache = M.prefill(params, cfg, embeds=batch["embeds"])
+    tok = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model))
+    lg, _ = M.decode(params, cfg, cache, tok, jnp.int32(s))
+    assert lg.shape == (b, cfg.vocab_size)
+    # CAM-head 'logits' are vote counts in [0, n_thresholds]
+    assert float(lg.min()) >= 0.0
+    assert float(lg.max()) <= cfg.cam_head_thresholds

@@ -1,0 +1,114 @@
+"""Sharding rules: spec construction, sanitization, mesh resolution."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import model as M
+from repro.sharding import SERVE_RULES, TRAIN_RULES
+from repro.sharding.rules import sanitize_spec
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_dedups_physical_axes():
+    # two logical axes mapping to 'model': only the first keeps it
+    spec = TRAIN_RULES.spec("heads", "mlp")
+    assert spec == P("model", None)
+
+
+def test_spec_tuple_axes():
+    spec = TRAIN_RULES.spec("batch", "seq")
+    assert spec == P(("pod", "data"), None)
+
+
+def test_resolve_drops_missing_axes(mesh11):
+    r = TRAIN_RULES.resolve(mesh11)
+    assert r.spec("batch") == P(("data",))
+    mesh3 = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    r3 = TRAIN_RULES.resolve(mesh3)
+    assert r3.spec("batch") == P(("pod", "data"))
+
+
+@given(
+    st.lists(st.integers(1, 48), min_size=1, max_size=4),
+    st.integers(0, 3),
+)
+def test_sanitize_spec_always_valid(dims, which):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # build a spec naming axes on every dim
+    axes = ["data", "model", None, ("data", "model")]
+    spec = P(*[axes[(which + i) % 4] for i in range(len(dims))])
+    out = sanitize_spec(spec, tuple(dims), mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for d, ax in zip(dims, tuple(out)):
+        if ax is None:
+            continue
+        f = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            f *= sizes[a]
+        assert d % f == 0
+
+
+def test_sanitize_drops_indivisible():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    # 24 heads on a 16-way axis -> replicated
+    out = sanitize_spec(P(None, "model"), (64, 24), FakeMesh())
+    assert out == P(None, None)
+    # 32 heads divisible -> kept
+    out = sanitize_spec(P(None, "model"), (64, 32), FakeMesh())
+    assert out == P(None, "model")
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_param_pspecs_structure_matches_params(arch):
+    cfg = configs.get_config(arch + "+smoke")
+    params = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    pspecs = M.param_pspecs(cfg, TRAIN_RULES)
+    # identical treedefs => every param leaf has a sharding rule
+    t1 = jax.tree_util.tree_structure(params)
+    t2 = jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda x: 0, pspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+    )
+    assert t1 == t2, f"{arch}: param/spec tree mismatch"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "jamba-v0.1-52b"])
+def test_cache_pspecs_structure(arch):
+    cfg = configs.get_config(arch + "+smoke")
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, 2, 32))
+    cspecs = M.cache_pspecs(cfg, SERVE_RULES)
+    t1 = jax.tree_util.tree_structure(cache)
+    t2 = jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda x: 0, cspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+    )
+    assert t1 == t2
+
+
+def test_train_rules_fsdp_shards_params():
+    spec = TRAIN_RULES.spec("p_attn_d", "p_attn_heads", None)
+    assert spec == P("data", "model", None)
+
+
+def test_serve_rules_2d_weight_sharding():
+    spec = SERVE_RULES.spec("p_mlp_d", "p_mlp_f")
+    assert spec == P("data", "model")
+    # experts sharded over the data axis in serving
+    spec = SERVE_RULES.spec("p_expert", "p_mlp_d", "p_mlp_f")
+    assert spec == P("data", None, "model")

