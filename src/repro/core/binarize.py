@@ -55,12 +55,41 @@ def packed_width(n_bits: int) -> int:
     return -(-n_bits // WORD)
 
 
+# Power-of-two vectors for the dot-product pack fast path. The word is
+# packed as two 16-bit halves so every partial sum stays int32-exact
+# (a single 32-bit dot would need bit 31 = 2^31, which overflows int32).
+_POW2_HALF = np.asarray(1 << np.arange(WORD // 2), np.int32)
+
+
 def pack_bits(bits):
     """Pack {0,1} bits along the last axis into uint32 words (little-endian).
 
     Pads with 0 to a multiple of 32. Padding bits are 0 on both operands of a
     Hamming distance, so XOR over padding contributes nothing.
+
+    Fast path: each 16-bit half-word is a single dot against the
+    power-of-two vector (int32-exact), and the two halves combine with one
+    shift-or — replacing the shift-broadcast-sum that materialized a
+    [..., kw, 32] uint32 temporary and reduced it lane by lane.
     """
+    *lead, k = bits.shape
+    kw = packed_width(k)
+    pad = kw * WORD - k
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * len(lead) + [(0, pad)])
+    halves = bits.reshape(*lead, kw * 2, WORD // 2).astype(jnp.int32)
+    pow2 = jnp.asarray(_POW2_HALF)
+    words16 = jax.lax.dot_general(
+        halves, pow2,
+        (((halves.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.uint32)
+    words16 = words16.reshape(*lead, kw, 2)
+    return words16[..., 0] | (words16[..., 1] << jnp.uint32(16))
+
+
+def pack_bits_reference(bits):
+    """The original shift-broadcast-sum pack (kept as oracle/baseline)."""
     *lead, k = bits.shape
     kw = packed_width(k)
     pad = kw * WORD - k
@@ -112,9 +141,19 @@ def binary_matvec_packed(w_packed, x_packed, n_bits: int):
 
     w_packed: [N, Kw] uint32;  x_packed: [..., Kw] uint32.
     Returns [..., N] int32 dot products in the ±1 domain.
+
+    Routed through the tiled Pallas popcount GEMM (kernels.binary_gemm) —
+    the broadcast XOR it replaces materialized an O(B*N*Kw) uint32
+    temporary in HBM; the kernel keeps each (bm, bn) tile's working set
+    in VMEM.
     """
-    hd = hamming_packed(x_packed[..., None, :], w_packed)
-    return dot_from_hd(hd, n_bits)
+    from repro.kernels import ops  # deferred: core stays import-light
+
+    *lead, kw = x_packed.shape
+    hd = ops.binary_gemm_hd(
+        x_packed.reshape(-1, kw), w_packed, bm=128, bn=128
+    )
+    return dot_from_hd(hd, n_bits).reshape(*lead, w_packed.shape[0])
 
 
 def random_pm1(key, shape, dtype=jnp.float32):

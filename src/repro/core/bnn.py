@@ -146,6 +146,22 @@ class FoldedLayer:
         return self.weights_pm1.shape[1]
 
 
+def parity_adjust_c(c: np.ndarray, n_in: int, bias_cells: int) -> np.ndarray:
+    """Clip C_j to the bias-cell budget with dead-zone-free parity.
+
+    y = <W_j, x> has the parity of n_in, so sign(y + C) has a dead zone
+    (y + C == 0) unless C has the opposite parity.  Nudging C up by one
+    is exactly decision-preserving on the even grid
+    (y + C >= 0  <=>  y + C + 1 > 0); clipping can land back on the
+    dead-zone parity only at the bounds, where we step one inward.
+    Shared by `fold` and the benchmark/test folded-net constructors.
+    """
+    c = np.asarray(c, np.int64)
+    c = np.where((c + n_in) % 2 == 0, c + 1, c)
+    c = np.clip(c, -bias_cells, bias_cells)
+    return np.where((c + n_in) % 2 == 0, c - np.sign(c).astype(c.dtype), c)
+
+
 def fold(params: Params, cfg: MLPConfig) -> list[FoldedLayer]:
     """Collapse trained BN into integer C_j per neuron (Eq. 3). Numpy-side."""
     folded = []
@@ -163,9 +179,8 @@ def fold(params: Params, cfg: MLPConfig) -> list[FoldedLayer]:
         thresh = np.where(flip, -thresh, thresh)
         c = np.round(-thresh).astype(np.int64)
         # C_j realized with cfg.bias_cells CAM cells: clip and match parity
-        # of the dot product so sign(y + C) has no dead zone. y has the
-        # parity of n_in; choose C with the opposite parity so y + C != 0.
-        c = np.clip(c, -cfg.bias_cells, cfg.bias_cells)
+        # of the dot product so sign(y + C) has no dead zone
+        c = parity_adjust_c(c, w.shape[1], cfg.bias_cells)
         folded.append(FoldedLayer(weights_pm1=w.astype(np.int8), c=c))
     return folded
 

@@ -196,16 +196,23 @@ def write_weights_with_bias(
     With p cells at '1' and (bias_cells - p) at '0' the row's dot product
     gains p - (bias_cells - p) = 2p - bias_cells, so p = (C_j+bias_cells)/2.
     C_j and bias_cells must have equal parity for an exact representation;
-    we round C_j toward zero otherwise (1-LSB quantization, as in silicon
-    where the cell count is fixed at array-write time).
+    we round C_j DOWN by one otherwise (1-LSB quantization, as in silicon
+    where the cell count is fixed at array-write time).  Rounding down —
+    rather than toward zero — is exactly decision-preserving for the
+    dead-zone-free C_j that `bnn.fold` emits: with y + C on the odd grid,
+    y + C > 0  <=>  y + (C - 1) >= 0, so the deployed CAM row makes the
+    same sign decisions as the folded oracle on every input.  (Rounding a
+    negative C toward zero instead would flip the decision at y = -C - 1.)
     """
     w = np.asarray(weights_pm1)
     c = np.asarray(bias_counts).astype(np.int64)
     n, _k = w.shape
     c = np.clip(c, -bias_cells, bias_cells)
-    # parity fix: when (c + bias_cells) is odd, quantize c toward zero
+    # parity fix: when (c + bias_cells) is odd, round c down by one.
+    # After the clip above, c == -bias_cells implies even parity, so the
+    # decrement never leaves the representable range.
     odd = (c + bias_cells) % 2 != 0
-    c = np.where(odd, c - np.sign(c), c)
+    c = np.where(odd, c - 1, c)
     p = (c + bias_cells) // 2  # cells storing '1'
     bias_bits = (np.arange(bias_cells)[None, :] < p[:, None]).astype(np.uint8)
     w_bits = (w > 0).astype(np.uint8)

@@ -173,11 +173,20 @@ def votes_fused(head: CAMEnsembleHead, x_pm1: jax.Array) -> jax.Array:
 
 
 def votes_kernel(head: CAMEnsembleHead, x_pm1: jax.Array) -> jax.Array:
-    """Pallas kernel path (interpret-mode on CPU). Same semantics as fused."""
-    from repro.kernels import ops  # local import: kernels are optional deps
+    """Pallas kernel path (interpret-mode on CPU). Same semantics as fused.
+
+    Routed through the fused end-to-end pipeline kernel (kernels/fused_mlp)
+    in its degenerate head-only form — one kernel, query in VMEM, votes
+    out. The standalone cam_vote kernel remains for sub-head workloads.
+    """
+    from repro.kernels import fused_mlp  # local: kernels are optional deps
 
     q = query_with_bias(x_pm1, head.bias_cells)
-    return ops.cam_vote(q, head.cam.rows_packed, head.thresholds)
+    return fused_mlp.fused_mlp_votes(
+        q, (), (), (), head.cam.rows_packed, head.thresholds,
+        bias_cells=head.bias_cells, bq=128,
+        interpret=jax.default_backend() != "tpu",
+    )
 
 
 def predict(
@@ -202,6 +211,41 @@ def predict(
 def topk_from_votes(votes: jax.Array, k: int) -> jax.Array:
     """Top-k classes by vote count (ties broken by class index)."""
     return jnp.argsort(-votes, axis=-1)[..., :k]
+
+
+def accuracy_from_cumulative(
+    cum_votes: jax.Array, labels, topk=(1, 2)
+) -> dict[int, dict[str, float]]:
+    """{p: {topK: acc}} from per-pass cumulative votes [P, B, C].
+
+    The shared accuracy tail of `accuracy_sweep` and the fused-pipeline
+    Fig.-5 path (cumulative votes via `sweep_from_votes`).
+    """
+    labels = jnp.asarray(labels)[:, None]
+    out = {}
+    for p in range(1, cum_votes.shape[0] + 1):
+        order = jnp.argsort(-cum_votes[p - 1], axis=-1)
+        out[p] = {
+            f"top{k}": float((order[:, :k] == labels).any(-1).mean())
+            for k in topk
+        }
+    return out
+
+
+def sweep_from_votes(votes: jax.Array, n_passes: int) -> jax.Array:
+    """Per-pass cumulative vote counts recovered from the fused total.
+
+    With the threshold schedule sorted ascending (as `build_head` emits
+    it), pass t fires on class j iff t >= n_passes - votes_j in the
+    noiseless limit; so the count after the first p passes is
+    clip(votes_j - (n_passes - p), 0, p).  This lets Fig.-5-style
+    truncated-sweep evaluations reuse ONE fused end-to-end pipeline pass
+    instead of re-searching per pass count.
+
+    votes: [..., C] int32 fused totals -> [n_passes, ..., C] int32.
+    """
+    p = jnp.arange(1, n_passes + 1).reshape((-1,) + (1,) * votes.ndim)
+    return jnp.clip(votes[None] - (n_passes - p), 0, p).astype(jnp.int32)
 
 
 def accuracy_sweep(
@@ -230,14 +274,4 @@ def accuracy_sweep(
     t_eff = head.thresholds.astype(jnp.float32)[:, None, None] + noise
     per_pass = (hd[None] <= t_eff).astype(jnp.int32)  # [P, B, C]
     cum = jnp.cumsum(per_pass, axis=0)  # votes after p passes
-    out = {}
-    labels = jnp.asarray(labels)
-    for p in range(1, n_passes + 1):
-        order = jnp.argsort(-cum[p - 1], axis=-1)
-        res = {}
-        for k in topk:
-            res[f"top{k}"] = float(
-                (order[:, :k] == labels[:, None]).any(-1).mean()
-            )
-        out[p] = res
-    return out
+    return accuracy_from_cumulative(cum, labels, topk)

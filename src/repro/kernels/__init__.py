@@ -3,6 +3,9 @@
   binary_gemm — bit-packed XNOR-popcount GEMM (the CAM matchline array,
                 adapted to VPU popcount over uint32 words)
   cam_search  — fused multi-threshold CAM vote (Algorithm 1 in one pass)
+  fused_mlp   — the ENTIRE deployed BNN in one pass: packed matvec + bias
+                + sign + in-register repack per layer, vote at the head;
+                hidden activations never leave VMEM
   ops         — jit'd public wrappers (interpret-mode on CPU)
   ref         — pure-jnp oracles used by the test suite
 

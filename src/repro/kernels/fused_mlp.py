@@ -1,0 +1,220 @@
+"""Pallas TPU kernel: the ENTIRE deployed BNN in one fused packed-domain pass.
+
+The paper's headline property is that weights AND activations never leave
+the binary domain: hidden activations are regenerated inside the CAM
+array, layer after layer, with no full-precision round trip (that is what
+buys 560 K inf/s at 0.8 mW).  The layer-by-layer TPU translation loses
+this: each `sign(Wx + C)` used to return unpacked ±1 floats to HBM, get
+re-packed by a host-level `pack_bits`, and only then feed the next layer
+(three HBM round trips per layer).
+
+This kernel is the TPU translation of "activations stay in the array"
+(DESIGN.md §4): ONE `pallas_call` per batch block executes
+
+    per hidden layer:  tiled XNOR-popcount matvec over packed uint32 rows
+                       -> + C_j integer bias add -> sign
+                       -> in-register repack to uint32 words
+    final layer:       fused 33-threshold CAM vote (cam_search semantics)
+
+with every intermediate — Hamming distances, pre-sign integers, repacked
+activation words — resident in VMEM/vector registers.  Only the packed
+input batch enters and only the int32 vote counts leave.
+
+Weights for the paper-scale models are tiny in packed form (784x128 bits
+= 12.8 KiB) so every layer's rows are broadcast whole to each grid cell;
+the VMEM working-set budget is derived in DESIGN.md §4.
+
+Correctness bar (tests/test_pipeline.py): bit-exact against the
+`bnn.folded_forward_exact` + `ensemble.votes_fused` digital oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.binary_gemm import _pad_axis
+
+WORD = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class _LayerMeta:
+    """Static shape info for one fused hidden layer."""
+
+    n_bits: int  # logical input bits (the XNOR-popcount dot width)
+    n_out: int  # neurons = activation bits produced
+    kw: int  # padded packed words per row (chunk multiple)
+
+
+def _hd_block(q, rows, chunk: int):
+    """Hamming distances between all (query, row) pairs, chunked over K.
+
+    q: [bq, kw] uint32 (VMEM value);  rows: [n, kw] uint32.
+    The [bq, n, chunk] XOR temporary is bounded by the fori_loop.
+    """
+    n_chunks = q.shape[-1] // chunk
+
+    def body(ci, acc):
+        qs = jax.lax.dynamic_slice_in_dim(q, ci * chunk, chunk, axis=1)
+        rs = jax.lax.dynamic_slice_in_dim(rows, ci * chunk, chunk, axis=1)
+        xor = jax.lax.bitwise_xor(qs[:, None, :], rs[None, :, :])
+        pc = jax.lax.population_count(xor).astype(jnp.int32)
+        return acc + pc.sum(axis=-1)
+
+    init = jnp.zeros((q.shape[0], rows.shape[0]), jnp.int32)
+    return jax.lax.fori_loop(0, n_chunks, body, init)
+
+
+def _repack(bits_u32, kw: int):
+    """{0,1} uint32 bits [bq, kw*32] -> packed words [bq, kw] (in-register).
+
+    Little-endian within each word, matching `binarize.pack_bits`.
+    """
+    bq = bits_u32.shape[0]
+    shaped = bits_u32.reshape(bq, kw, WORD)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return (shaped << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _make_kernel(
+    metas: Sequence[_LayerMeta],
+    head_kw: int,
+    bias_cells: int,
+    chunk: int,
+):
+    """Build the fused kernel body for a static layer stack."""
+
+    def kernel(*refs):
+        x_ref = refs[0]
+        out_ref = refs[-1]
+        thr_ref = refs[-2]
+        head_ref = refs[-3]
+
+        q = x_ref[...]  # [bq, kw0] packed input activations
+        bq = q.shape[0]
+        for i, m in enumerate(metas):
+            w = refs[1 + 2 * i][...]  # [n_out, kw] packed weight rows
+            c = refs[2 + 2 * i][...]  # [n_out] int32 folded BN constants
+            hd = _hd_block(q, w, chunk)
+            y = (m.n_bits - 2 * hd) + c[None, :]  # Eq. (3) pre-sign int
+            bits = (y >= 0).astype(jnp.uint32)  # sign, 0 -> +1
+            if i + 1 < len(metas):
+                tail_kw, tail_bias = metas[i + 1].kw, 0
+            else:
+                tail_kw, tail_bias = head_kw, bias_cells
+            parts = [bits]
+            if tail_bias:
+                # bias searchlines always driven to logic '1'
+                parts.append(jnp.ones((bq, tail_bias), jnp.uint32))
+            pad = tail_kw * WORD - m.n_out - tail_bias
+            if pad:
+                parts.append(jnp.zeros((bq, pad), jnp.uint32))
+            q = _repack(
+                jnp.concatenate(parts, axis=-1) if len(parts) > 1 else bits,
+                tail_kw,
+            )
+        head = head_ref[...]  # [C, head_kw] packed class rows (bias incl.)
+        thr = thr_ref[...]  # [P] int32 HD tolerances
+        hd = _hd_block(q, head, chunk)
+        votes = (hd[:, :, None] <= thr[None, None, :]).astype(jnp.int32)
+        out_ref[...] = votes.sum(-1)
+
+    return kernel
+
+
+def _pad_words(a, chunk: int):
+    """Pad packed words on the last axis to a chunk multiple (zero words)."""
+    return _pad_axis(a, a.ndim - 1, chunk)[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("layer_n_bits", "bias_cells", "bq", "chunk", "interpret"),
+)
+def fused_mlp_votes(
+    x_packed: jax.Array,
+    layer_ws: tuple[jax.Array, ...],
+    layer_cs: tuple[jax.Array, ...],
+    layer_n_bits: tuple[int, ...],
+    head_rows: jax.Array,
+    thresholds: jax.Array,
+    *,
+    bias_cells: int,
+    bq: int = 256,
+    chunk: int = 4,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused end-to-end deployed-BNN vote counts.
+
+    x_packed    : [B, Kw0] uint32 — packed ±1 input activations
+    layer_ws    : per hidden layer [N_l, Kw_l] uint32 packed weight rows
+    layer_cs    : per hidden layer [N_l] int32 folded BN constants
+    layer_n_bits: per hidden layer logical input bit count
+    head_rows   : [C, Kw_h] uint32 packed class rows (bias cells included)
+    thresholds  : [P] int32 HD tolerances (Algorithm 1 sweep)
+    bias_cells  : bias searchlines appended to the head query
+    returns     : [B, C] int32 vote counts (== ensemble.votes_fused)
+
+    With no hidden layers, `x_packed` must already be the head query
+    (activation bits + bias drive bits), as built by `cam.query_with_bias`.
+    """
+    if len(layer_ws) != len(layer_cs) or len(layer_ws) != len(layer_n_bits):
+        raise ValueError("layer_ws / layer_cs / layer_n_bits length mismatch")
+
+    x, b0 = _pad_axis(x_packed, 0, bq)
+    x = _pad_words(x, chunk)
+    head = _pad_words(head_rows, chunk)
+    n_classes = head.shape[0]
+    thr = thresholds.astype(jnp.int32)
+
+    metas = []
+    operands = [x]
+    specs = [pl.BlockSpec((bq, x.shape[1]), lambda i: (i, 0))]
+
+    def _whole(shape):
+        nd = len(shape)
+        if nd == 1:
+            return pl.BlockSpec(shape, lambda i: (0,))
+        return pl.BlockSpec(shape, lambda i: (0, 0))
+
+    for w, c, n_bits in zip(layer_ws, layer_cs, layer_n_bits):
+        w = _pad_words(w, chunk)
+        metas.append(_LayerMeta(n_bits=n_bits, n_out=w.shape[0], kw=w.shape[1]))
+        operands += [w, c.astype(jnp.int32)]
+        specs += [_whole(w.shape), _whole(c.shape)]
+    operands += [head, thr]
+    specs += [_whole(head.shape), _whole(thr.shape)]
+
+    # shape discipline: the input must line up with its first operand —
+    # a mismatch (e.g. a head-only query packed WITHOUT the bias drive
+    # bits) would otherwise silently truncate the HD loop and return
+    # wrong votes
+    first_kw = (layer_ws[0] if metas else head_rows).shape[1]
+    if x_packed.shape[1] != first_kw:
+        raise ValueError(
+            f"x_packed width {x_packed.shape[1]} does not match the first "
+            f"operand's packed width {first_kw}; for a head-only net the "
+            "query must include the bias drive bits (cam.query_with_bias)"
+        )
+    # ... and each repack target must hold the produced bits
+    if metas:
+        for prev, nxt in zip(metas[:-1], metas[1:]):
+            assert prev.n_out <= nxt.kw * WORD, (prev, nxt)
+        assert metas[-1].n_out + bias_cells <= head.shape[1] * WORD
+    kernel = _make_kernel(metas, head.shape[1], bias_cells, chunk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(x.shape[0] // bq,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((bq, n_classes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], n_classes), jnp.int32),
+        interpret=interpret,
+    )(*operands)
+    return out[:b0]

@@ -161,7 +161,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
             microbatches=microbatches, remat=remat,
         )
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = hlo_cost.cost_analysis_dict(compiled)
         hlo_text = compiled.as_text()
         walker = hlo_cost.analyze_hlo_text(hlo_text)
         rep = roofline.derive(

@@ -76,6 +76,18 @@ _SKIP_BYTES_OPS = {
 VMEM_RESIDENT_BYTES = 16 * 2**20
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """`Compiled.cost_analysis()` across jax versions.
+
+    Newer jax returns a flat dict; older versions return a single-element
+    list of dicts (one per partition). Normalize to a dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def _shape_bytes(type_str: str) -> float:
     """Bytes of an HLO type string (handles tuples)."""
     total = 0.0

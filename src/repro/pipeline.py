@@ -1,0 +1,196 @@
+"""End-to-end deployed-BNN inference pipeline (packed domain, fused).
+
+`compile_pipeline(folded, ens_cfg)` turns a folded binary MLP (list of
+`bnn.FoldedLayer`) plus an Algorithm-1 ensemble config into a jitted
+batch classifier:
+
+    pipe = compile_pipeline(folded, EnsembleConfig())
+    votes = pipe.votes(x_pm1)     # [B, n_classes] int32 vote counts
+    pred  = pipe.predict(x_pm1)   # [B] int32 argmax classes
+
+Semantics are bit-exact equal to the digital oracle
+(`bnn.folded_forward_exact` hidden layers + `ensemble.votes_fused` head);
+tests/test_pipeline.py asserts this across bank configurations.
+
+Two fused implementations, selected by `impl` (default: by backend):
+
+  pallas — kernels/fused_mlp.py: one kernel launch per batch block,
+           hidden activations resident in VMEM (the TPU deployment path;
+           runs under interpret mode elsewhere, for semantics only).
+  xla    — the same packed-domain math as a single jitted XLA program:
+           activations stay uint32-packed between layers and the whole
+           net fuses into one executable (the portable fast path — on
+           CPU this is what beats the layer-by-layer unpacked flow; see
+           benchmarks/e2e_throughput.py).
+
+Batch-size bucketing: inputs are zero-padded up to the next bucket
+(powers of two, floor `min_bucket`) so a serving loop with ragged batch
+sizes compiles O(log B) program variants instead of one per size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binarize
+from repro.core.bnn import FoldedLayer
+from repro.core.ensemble import CAMEnsembleHead, EnsembleConfig, build_head
+from repro.kernels import fused_mlp
+
+
+def next_bucket(n: int, min_bucket: int = 64) -> int:
+    """Smallest power-of-two bucket >= n (floored at min_bucket)."""
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return b
+
+
+def _votes_xla(x_packed, layer_ws, layer_cs, layer_n_bits, head_rows,
+               thresholds, bias_cells: int):
+    """Packed-domain fused forward as straight-line jnp (one XLA program).
+
+    Same math as the Pallas kernel: XNOR-popcount matvec + C + sign +
+    repack per hidden layer, multi-threshold vote at the head.  Bit-exact
+    equal to `fused_mlp.fused_mlp_votes` (integer arithmetic throughout).
+    """
+    q = x_packed
+    n_layers = len(layer_ws)
+    for i, (w, c, n_bits) in enumerate(zip(layer_ws, layer_cs, layer_n_bits)):
+        hd = binarize.hamming_packed(q[:, None, :], w)
+        y = (n_bits - 2 * hd) + c[None, :]
+        bits = (y >= 0).astype(jnp.uint8)
+        if i + 1 == n_layers:  # head query: append bias drive bits
+            ones = jnp.ones((bits.shape[0], bias_cells), jnp.uint8)
+            bits = jnp.concatenate([bits, ones], axis=-1)
+        q = binarize.pack_bits(bits)
+        # align packed width with the next operand's (zero pad words)
+        kw_next = (head_rows if i + 1 == n_layers else layer_ws[i + 1]).shape[1]
+        if q.shape[1] < kw_next:
+            q = jnp.pad(q, ((0, 0), (0, kw_next - q.shape[1])))
+    hd = binarize.hamming_packed(q[:, None, :], head_rows)
+    return (hd[:, :, None] <= thresholds[None, None, :]).astype(
+        jnp.int32
+    ).sum(-1)
+
+
+@dataclasses.dataclass
+class CompiledPipeline:
+    """A jitted end-to-end batch classifier for one deployed BNN."""
+
+    head: CAMEnsembleHead
+    n_in: int
+    n_classes: int
+    impl: str
+    min_bucket: int
+    head_only: bool  # no hidden layers: input feeds the CAM head directly
+    _votes_packed: callable  # [Bp, Kw0] uint32 -> [Bp, C] int32 (jitted)
+
+    def votes(self, x_pm1: jax.Array) -> jax.Array:
+        """Vote counts for a ±1 input batch [B, n_in] -> [B, C] int32."""
+        x_pm1 = jnp.asarray(x_pm1)
+        if self.head_only:
+            from repro.core.cam import query_with_bias
+
+            x_packed = query_with_bias(x_pm1, self.head.bias_cells)
+        else:
+            x_packed = binarize.pack_pm1(x_pm1)
+        return self.votes_packed(x_packed)
+
+    def votes_packed(self, x_packed: jax.Array) -> jax.Array:
+        """Vote counts for an already-packed input batch [B, Kw0]."""
+        b = x_packed.shape[0]
+        bp = next_bucket(b, self.min_bucket)
+        if bp != b:
+            x_packed = jnp.pad(x_packed, ((0, bp - b), (0, 0)))
+        return self._votes_packed(x_packed)[:b]
+
+    def predict(self, x_pm1: jax.Array) -> jax.Array:
+        """Algorithm 1 prediction: per-class majority vote -> argmax."""
+        return jnp.argmax(self.votes(x_pm1), axis=-1)
+
+    def __call__(self, x_pm1: jax.Array) -> jax.Array:
+        return self.predict(x_pm1)
+
+
+def compile_pipeline(
+    folded: Sequence[FoldedLayer],
+    ens_cfg: EnsembleConfig | None = None,
+    *,
+    impl: str | None = None,
+    bq: int = 256,
+    chunk: int = 4,
+    min_bucket: int = 64,
+    interpret: bool | None = None,
+) -> CompiledPipeline:
+    """Compile a folded BNN + ensemble head into a fused batch classifier.
+
+    folded  : `bnn.fold` output — hidden layers + the output layer (last).
+    ens_cfg : Algorithm-1 config (thresholds / bias cells); default paper's.
+    impl    : "pallas" | "xla" | None (auto: pallas on TPU, xla elsewhere —
+              the Pallas kernel only *executes* off-TPU in interpret mode,
+              which is for semantics tests, not speed).
+    """
+    ens_cfg = ens_cfg or EnsembleConfig()
+    if len(folded) < 1:
+        raise ValueError("need at least the output layer")
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown pipeline impl {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    hidden, out_layer = list(folded[:-1]), folded[-1]
+    head = build_head(out_layer, ens_cfg)
+
+    layer_ws = tuple(
+        binarize.pack_bits(jnp.asarray((l.weights_pm1 > 0).astype(np.uint8)))
+        for l in hidden
+    )
+    layer_cs = tuple(jnp.asarray(l.c, jnp.int32) for l in hidden)
+    layer_n_bits = tuple(int(l.n_in) for l in hidden)
+    head_rows = head.cam.rows_packed
+    thresholds = head.thresholds
+
+    if impl == "pallas":
+        def votes_packed_fn(x_packed):
+            return fused_mlp.fused_mlp_votes(
+                x_packed, layer_ws, layer_cs, layer_n_bits,
+                head_rows, thresholds,
+                bias_cells=head.bias_cells, bq=bq, chunk=chunk,
+                interpret=interpret,
+            )
+    else:
+        # zero-pad every packed operand pair to a common word width once,
+        # at compile time, so the jitted program has no ragged shapes
+        ws = [fused_mlp._pad_words(w, chunk) for w in layer_ws]
+        hr = fused_mlp._pad_words(head_rows, chunk)
+
+        @jax.jit
+        def votes_packed_fn(x_packed):
+            kw0 = (ws[0] if ws else hr).shape[1]
+            if x_packed.shape[1] < kw0:
+                x_packed = jnp.pad(
+                    x_packed, ((0, 0), (0, kw0 - x_packed.shape[1]))
+                )
+            return _votes_xla(
+                x_packed, ws, layer_cs, layer_n_bits, hr, thresholds,
+                head.bias_cells,
+            )
+
+    return CompiledPipeline(
+        head=head,
+        n_in=int(hidden[0].n_in) if hidden else int(out_layer.n_in),
+        n_classes=head.n_classes,
+        impl=impl,
+        min_bucket=min_bucket,
+        head_only=not hidden,
+        _votes_packed=votes_packed_fn,
+    )

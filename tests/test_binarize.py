@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip when hypothesis is absent
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import binarize as B
 

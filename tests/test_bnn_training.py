@@ -52,14 +52,12 @@ def test_cam_deployment_matches_folded_oracle(trained):
     h = x
     for ml, fl in zip(mapped[:-1], folded[:-1]):
         h = mapping.layer_forward(ml, h, "exact")
-    # the deployed hidden activations equal the folded oracle's, after
-    # the CAM's parity quantization of C_j (1 LSB toward zero)
-    c = folded[0].c.copy()
-    odd = (c + cfg.bias_cells) % 2 != 0
-    c = np.where(odd, c - np.sign(c), c)
+    # fold emits parity-adjusted C_j (y + C never zero), and the CAM's
+    # round-down quantization is decision-preserving on that odd grid —
+    # so the deployed hidden activations equal the folded oracle's EXACTLY
     oracle_h = jnp.where(
         x @ jnp.asarray(folded[0].weights_pm1.T, jnp.float32)
-        + jnp.asarray(c, jnp.float32) >= 0, 1.0, -1.0,
+        + jnp.asarray(folded[0].c, jnp.float32) >= 0, 1.0, -1.0,
     )
     np.testing.assert_array_equal(np.asarray(h), np.asarray(oracle_h))
 

@@ -5,7 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_cost import analyze_hlo_text, parse_hlo
+from repro.launch.hlo_cost import (
+    analyze_hlo_text,
+    cost_analysis_dict,
+    parse_hlo,
+)
 
 
 def _compiled(f, *args):
@@ -27,7 +31,7 @@ def test_scan_trip_count_multiplication():
     dot_flops = 2 * n**3
     assert 9 * dot_flops <= t.flops <= 9 * dot_flops * 1.2
     # raw cost_analysis counts the body once — the reason the walker exists
-    raw = c.cost_analysis()["flops"]
+    raw = cost_analysis_dict(c)["flops"]
     assert raw < t.flops / 4
 
 
@@ -45,7 +49,7 @@ def test_unrolled_matches_walker():
 
     sds = jax.ShapeDtypeStruct((n, n), jnp.float32)
     t_scan = analyze_hlo_text(_compiled(f_scan, sds).as_text())
-    raw_unroll = _compiled(f_unroll, sds).cost_analysis()["flops"]
+    raw_unroll = cost_analysis_dict(_compiled(f_unroll, sds))["flops"]
     assert abs(t_scan.flops - raw_unroll) / raw_unroll < 0.2
 
 

@@ -3,7 +3,10 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip when hypothesis is absent
+    from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
