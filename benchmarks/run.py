@@ -8,6 +8,7 @@ Sections:
   kern     — Pallas kernel microbench + TPU memory-roofline derivations
   roofline — the 40-cell dry-run roofline table (§Roofline source)
   e2e      — fused-pipeline vs layer-by-layer end-to-end throughput
+  noise    — silicon-noise robustness curves + fused-MC vs faithful speedup
 
 JSON schema (picbnn-bench/v1): {"schema", "meta": {...}, "sections":
 {name: [row, ...]}} where each row is the section's CSV tuple as a list
@@ -33,7 +34,7 @@ def main(argv=None):
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: "
-                         "fig5,table2,kern,roofline,e2e")
+                         "fig5,table2,kern,roofline,e2e,noise")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (sections -> rows)")
     args = ap.parse_args(argv)
@@ -44,6 +45,7 @@ def main(argv=None):
         accuracy,
         e2e_throughput,
         kernels_bench,
+        noise_robustness,
         roofline_table,
         table2,
     )
@@ -60,6 +62,12 @@ def main(argv=None):
         # written solely by `python -m benchmarks.e2e_throughput`
         sections["e2e"] = _rows_jsonable(
             e2e_throughput.main(fast=args.fast, write_json=False)
+        )
+    if only is None or "noise" in only:
+        # rows only — the committed BENCH_noise.json trajectory file is
+        # written solely by `python -m benchmarks.noise_robustness`
+        sections["noise"] = _rows_jsonable(
+            noise_robustness.main(fast=args.fast, write_json=False)
         )
     if only is None or "fig5" in only:
         sections["fig5"] = _rows_jsonable(accuracy.main(fast=args.fast))

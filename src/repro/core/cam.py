@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import binarize
+from repro.core import binarize, physics
 from repro.core.device_model import (
     BANK_CONFIGS,
     AnalogParams,
@@ -142,18 +142,17 @@ class CAMArray:
         threshold  — integer/float HD tolerance T (already derived from the
                      analog knobs), scalar or broadcastable to [..., N].
         noise/key  — optional PVT noise: perturbs the *effective* per-row
-                     threshold (see NoiseModel.effective_threshold).
+                     threshold via the unified sampler
+                     (physics.sample_search_thresholds) — ALL NoiseModel
+                     sigmas apply, with nearest-Table-I-anchor knob
+                     provenance for the vref/strobe terms.
 
         Returns uint8 [..., N]: 1 where HD(row, query) <= T_eff.
         """
         hd = self.search_hd(query_packed)
-        t_eff = jnp.asarray(threshold, jnp.float32)
-        if key is not None and (
-            noise.sigma_hd or noise.sigma_vref or noise.sigma_tjitter
-        ):
-            jitter = noise.sigma_hd * jax.random.normal(key, hd.shape)
-            drift = noise.temp_drift_hd
-            t_eff = t_eff + jitter + drift
+        t_eff = physics.sample_search_thresholds(
+            key, threshold, noise, shape=hd.shape, params=params
+        )
         return (hd.astype(jnp.float32) <= t_eff).astype(jnp.uint8)
 
     def search_knobs(
@@ -167,11 +166,17 @@ class CAMArray:
         noise: NoiseModel = NOISELESS,
         key: Optional[jax.Array] = None,
     ) -> jax.Array:
-        """Search with the threshold derived from the analog knob voltages."""
+        """Search with the threshold derived from the analog knob voltages.
+
+        Noise enters through the exact knob-space sampler
+        (physics.sample_effective_threshold): the voltages themselves are
+        perturbed and converted through `hd_threshold`, rather than the
+        linearized per-pass deltas the schedule paths use.
+        """
         params = params or default_params()
-        if key is not None:
-            t = noise.effective_threshold(
-                key, params, v_ref, v_eval, v_st, shape=(self.n_rows,)
+        if key is not None and noise.is_active:
+            t = physics.sample_effective_threshold(
+                key, params, noise, v_ref, v_eval, v_st, shape=(self.n_rows,)
             )
         else:
             t = hd_threshold(params, v_ref, v_eval, v_st)

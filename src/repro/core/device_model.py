@@ -268,22 +268,31 @@ class NoiseModel:
     sigma_tjitter: float = 0.02
     temp_drift_hd: float = 0.0
 
+    @property
+    def is_active(self) -> bool:
+        """True when ANY non-ideality (random sigma or drift) is nonzero."""
+        return bool(
+            self.sigma_hd
+            or self.sigma_vref
+            or self.sigma_tjitter
+            or self.temp_drift_hd
+        )
+
     def effective_threshold(
         self, key: jax.Array, params: AnalogParams, v_ref, v_eval, v_st, shape=()
     ):
         """Sample a per-row effective HD threshold under PVT noise.
 
         Returns a float array of `shape`: the HD threshold actually applied
-        by the analog comparison for each row in this pass.
+        by the analog comparison for each row in this pass.  The sampling
+        itself lives in `core/physics.py` (the unified noise module); this
+        method is a thin delegate kept for API stability.
         """
-        k1, k2, k3 = jax.random.split(key, 3)
-        v_ref_n = v_ref + self.sigma_vref * jax.random.normal(k1, shape)
-        base = hd_threshold(params, v_ref_n, v_eval, v_st)
-        # time jitter scales m* multiplicatively: m* ~ 1/t_s
-        tj = 1.0 + self.sigma_tjitter * jax.random.normal(k2, shape)
-        base = base / jnp.maximum(tj, 0.5)
-        row = self.sigma_hd * jax.random.normal(k3, shape)
-        return base + row + self.temp_drift_hd
+        from repro.core import physics  # deferred: avoid circular import
+
+        return physics.sample_effective_threshold(
+            key, params, self, v_ref, v_eval, v_st, shape
+        )
 
 
 NOISELESS = NoiseModel(sigma_hd=0.0, sigma_vref=0.0, sigma_tjitter=0.0)

@@ -16,15 +16,23 @@ Under analog noise each vote is a Bernoulli trial with success probability
 sigmoid-like in (T_t - HD_j); summing over passes concentrates the estimate
 (LLN), which is what lets the silicon skip ADC/TDC readout entirely.
 
-Three execution modes:
+Execution modes:
   faithful  — 33 sequential searches, per-pass PVT noise, per-pass knob
               voltages from the behavioural device model (the silicon flow).
   fused     — beyond-paper TPU optimization: HD is computed once per
               (query, row) and compared against all T in-register; the vote
               count is materialized directly.  Bit-exact equal to `faithful`
               in the noiseless limit (tests assert this); ~33x fewer array
-              reads.
+              reads.  `votes_fused_noisy` is the silicon-conditioned twin:
+              same HD-once amortization, thresholds sampled per pass from
+              the unified physics (`core/physics.SearchPhysics`) — equal to
+              `faithful` in distribution (tests assert mean/variance
+              agreement), bit-equal to `fused` in the NOISELESS limit.
   kernel    — the Pallas implementation of `fused` (kernels/cam_search.py).
+
+All noisy paths draw their effective thresholds from ONE sampler
+(`SearchPhysics.sample`); no noise arithmetic lives in this module
+(DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -47,6 +55,7 @@ from repro.core.device_model import (
     default_params,
     knob_schedule,
 )
+from repro.core.physics import SearchPhysics, achieved_sweep
 
 # Algorithm 1 line 3: HD threshold sweep {0, 2, 4, ..., 64} -> 33 passes.
 PAPER_THRESHOLDS = tuple(range(0, 65, 2))
@@ -58,6 +67,10 @@ class EnsembleConfig:
     bias_cells: int = 64
     noise: NoiseModel = NOISELESS
     mode: str = "fused"  # faithful | fused | kernel
+    # True: deploy the knob schedule's *achieved* calibrated tolerances
+    # (what the analog knobs actually deliver, float) instead of the ideal
+    # integer sweep — see build_head.
+    calibrated: bool = False
 
     @property
     def n_passes(self) -> int:
@@ -109,15 +122,37 @@ def build_head(
     33 equispaced tolerance levels straddling the decision boundary.  This
     reading reproduces Fig. 5 (accuracy grows then saturates with pass
     count) and is recorded as an assumption in DESIGN.md.
+
+    With ``cfg.calibrated`` the ideal integer sweep is replaced by the
+    knob schedule's *achieved* tolerances (`physics.achieved_sweep`): the
+    float thresholds the Table-I-calibrated analog knobs actually deliver,
+    offset by the same centering.  Thresholds then carry float32 dtype;
+    every consumer (fused/faithful/kernels) compares HD against them
+    unchanged.
     """
     cam = write_weights_with_bias(layer.weights_pm1, layer.c, cfg.bias_cells)
     n_total = layer.n_in + cfg.bias_cells
     center = n_total // 2
     sweep = np.asarray(cfg.thresholds, np.int64)
-    t_hd = center - sweep.max() // 2 + sweep
+    offset = center - sweep.max() // 2
+    if cfg.calibrated:
+        # achieved_sweep targets the equispaced linspace(0, max, P) —
+        # the paper's sweep; anything else would silently deploy
+        # unrelated operating points
+        if not np.array_equal(
+            sweep, np.linspace(0, sweep.max(), len(sweep)).round()
+        ):
+            raise ValueError(
+                "calibrated=True supports only an equispaced threshold "
+                f"sweep (the knob schedule targets it); got {sweep}"
+            )
+        t_hd = offset + achieved_sweep(len(sweep), int(sweep.max()))
+        thresholds = jnp.asarray(t_hd, jnp.float32)
+    else:
+        thresholds = jnp.asarray(offset + sweep, jnp.int32)
     return CAMEnsembleHead(
         cam=cam,
-        thresholds=jnp.asarray(t_hd, jnp.int32),
+        thresholds=thresholds,
         bias_cells=cfg.bias_cells,
     )
 
@@ -132,37 +167,34 @@ def votes_faithful(
     noise: NoiseModel = NOISELESS,
     key: Optional[jax.Array] = None,
     params: Optional[AnalogParams] = None,
+    physics: Optional[SearchPhysics] = None,
 ) -> jax.Array:
     """The silicon flow: one search per threshold, per-pass PVT noise.
 
     x_pm1: [..., n_in] +-1 activations. Returns int32 votes [..., classes].
+
+    The effective per-pass thresholds come from the unified sampler
+    (`SearchPhysics.sample`) — ALL NoiseModel terms apply (sigma_hd per
+    row; sigma_vref / sigma_tjitter pass-global through the Table-I knob
+    schedule; temp_drift_hd systematic).  Pass `physics` to reuse a
+    prebuilt bundle; otherwise one is built from (head, noise, params).
     """
     q = query_with_bias(x_pm1, head.bias_cells)
-    hd = head.cam.search_hd(q)  # [..., classes] (the analog ML state)
-    n_passes = head.thresholds.shape[0]
-    if key is None:
-        keys = [None] * n_passes
-    else:
-        keys = list(jax.random.split(key, n_passes))
-
+    hd = head.cam.search_hd(q).astype(jnp.float32)  # [..., C] (analog ML)
+    phys = physics or SearchPhysics.for_head(head, noise, params)
+    t_eff = phys.sample(key, batch_shape=hd.shape[:-1], n_rows=hd.shape[-1])
     votes = jnp.zeros(hd.shape, jnp.int32)
-    for t in range(n_passes):
-        t_eff = head.thresholds[t].astype(jnp.float32)
-        if keys[t] is not None and (
-            noise.sigma_hd or noise.sigma_vref or noise.sigma_tjitter
-        ):
-            t_eff = t_eff + noise.sigma_hd * jax.random.normal(
-                keys[t], hd.shape
-            ) + noise.temp_drift_hd
-        votes = votes + (hd.astype(jnp.float32) <= t_eff).astype(jnp.int32)
+    for t in range(phys.n_passes):  # one search per pass, as in silicon
+        votes = votes + (hd <= t_eff[t]).astype(jnp.int32)
     return votes
 
 
 def votes_fused(head: CAMEnsembleHead, x_pm1: jax.Array) -> jax.Array:
     """Beyond-paper fused sweep: HD once, all thresholds in-register.
 
-    Noiseless by construction (the TPU compare is exact); bit-identical to
-    votes_faithful(..., noise=NOISELESS).
+    The noiseless limit (the TPU compare is exact); bit-identical to
+    votes_faithful(..., noise=NOISELESS).  For the silicon-conditioned
+    twin with the same HD-once amortization see `votes_fused_noisy`.
     """
     q = query_with_bias(x_pm1, head.bias_cells)
     hd = head.cam.search_hd(q)  # [..., C]
@@ -170,6 +202,30 @@ def votes_fused(head: CAMEnsembleHead, x_pm1: jax.Array) -> jax.Array:
     # votes = n_passes - searchsorted(T, hd)
     t = head.thresholds
     return (hd[..., None] <= t).sum(-1).astype(jnp.int32)
+
+
+def votes_fused_noisy(
+    head: CAMEnsembleHead,
+    x_pm1: jax.Array,
+    *,
+    key: Optional[jax.Array],
+    noise: NoiseModel = NOISELESS,
+    params: Optional[AnalogParams] = None,
+    physics: Optional[SearchPhysics] = None,
+) -> jax.Array:
+    """Fused sweep under PVT noise: HD once, sampled thresholds [P, ..., C].
+
+    Identical in distribution to `votes_faithful` (same unified sampler,
+    same pass/row draw structure) and bit-identical to `votes_fused` in
+    the NOISELESS limit — but vectorized over passes, so Monte-Carlo
+    silicon-noise evaluation runs at fused speed (the pipeline's
+    `votes_mc` builds on the same math).
+    """
+    q = query_with_bias(x_pm1, head.bias_cells)
+    hd = head.cam.search_hd(q).astype(jnp.float32)  # [..., C]
+    phys = physics or SearchPhysics.for_head(head, noise, params)
+    t_eff = phys.sample(key, batch_shape=hd.shape[:-1], n_rows=hd.shape[-1])
+    return (hd[None] <= t_eff).sum(0).astype(jnp.int32)
 
 
 def votes_kernel(head: CAMEnsembleHead, x_pm1: jax.Array) -> jax.Array:
@@ -235,6 +291,16 @@ def accuracy_from_cumulative(
 def sweep_from_votes(votes: jax.Array, n_passes: int) -> jax.Array:
     """Per-pass cumulative vote counts recovered from the fused total.
 
+    NOISELESS-ONLY PRECONDITION (DESIGN.md §8): the reconstruction relies
+    on the per-pass match indicators being a monotone staircase in the
+    (sorted) threshold schedule — true only when every pass compares the
+    same exact HD.  Under PVT noise the indicators are independent
+    Bernoulli draws and the staircase identity breaks; silicon-noise
+    truncated sweeps must use the sampled path
+    (`pipeline.CompiledPipeline.cum_votes`) instead.  Callers feeding a
+    noisy vote total here get silently wrong per-pass counts — guard at
+    the call site (see benchmarks/accuracy.py).
+
     With the threshold schedule sorted ascending (as `build_head` emits
     it), pass t fires on class j iff t >= n_passes - votes_j in the
     noiseless limit; so the count after the first p passes is
@@ -264,14 +330,8 @@ def accuracy_sweep(
     """
     q = query_with_bias(hidden_pm1, head.bias_cells)
     hd = head.cam.search_hd(q).astype(jnp.float32)  # [B, C]
-    n_passes = head.thresholds.shape[0]
-    if key is not None and (cfg.noise.sigma_hd or cfg.noise.sigma_tjitter):
-        noise = cfg.noise.sigma_hd * jax.random.normal(
-            key, (n_passes,) + hd.shape
-        )
-    else:
-        noise = jnp.zeros((n_passes,) + hd.shape)
-    t_eff = head.thresholds.astype(jnp.float32)[:, None, None] + noise
+    phys = SearchPhysics.for_head(head, cfg.noise)
+    t_eff = phys.sample(key, batch_shape=hd.shape[:-1], n_rows=hd.shape[-1])
     per_pass = (hd[None] <= t_eff).astype(jnp.int32)  # [P, B, C]
     cum = jnp.cumsum(per_pass, axis=0)  # votes after p passes
     return accuracy_from_cumulative(cum, labels, topk)

@@ -1,0 +1,342 @@
+"""Unified search physics: the ONLY producer of effective HD thresholds.
+
+Every noisy CAM search in this repo — `cam.CAMArray.search`, the Algorithm-1
+ensemble (`ensemble.votes_faithful` / `accuracy_sweep`), and the fused
+pipeline (`pipeline.compile_pipeline(..., noise=)` and both kernel twins) —
+obtains its *effective* per-pass Hamming-distance thresholds from this
+module.  Before this existed, three call sites each applied a different
+subset of :class:`~repro.core.device_model.NoiseModel` (the "dead noise
+gates": sigma_vref / sigma_tjitter were tested but never applied); now the
+sampling semantics live in one place and the consumers only compare.
+
+Physical picture (DESIGN.md §8): the matchline comparison is
+``V_ML(t_s; HD) > V_ref``.  Every PVT non-ideality is referred to the
+*threshold side* of that comparison, in HD units:
+
+  sigma_vref    — V_ref drift, converted through the analytic sensitivity
+                  ``d(m*)/dV_ref`` of the behavioural model at the pass's
+                  knob operating point (`vref_sensitivity`).  One MLSA
+                  reference per search => the draw is PASS-GLOBAL (shared
+                  by every row of that search).
+  sigma_tjitter — sampling-strobe jitter; ``m* ~ 1/t_s`` so it acts
+                  multiplicatively on the pass's *logical* tolerance
+                  magnitude.  One strobe per search => pass-global.
+  sigma_hd      — MLSA offset + per-cell discharge mismatch, lumped as
+                  input-referred noise in HD units.  PER-ROW draw.
+  temp_drift_hd — deterministic systematic offset shared by all rows.
+
+Referring per-row matchline noise to the threshold is distribution-exact:
+``match <=> HD <= T + eps  <=>  HD - eps <= T`` — the Bernoulli vote
+probabilities (and hence every vote-count moment) are identical whether the
+noise is modeled on the analog HD reading or on the threshold.  This is
+what lets the fused TPU paths (HD computed ONCE, 33 compares in-register)
+keep exact silicon-noise semantics: thresholds are sampled as ``[P, ...]``
+float arrays outside the kernel and only the compare changes.
+
+Per-pass knob provenance: a full Algorithm-1 sweep takes its operating
+points from the Table-I-calibrated :func:`device_model.knob_schedule`
+(cached); a bare threshold with no schedule (a standalone `cam.search`)
+falls back to the nearest Table-I anchor.  In the NOISELESS limit every
+sampler in this module returns the base thresholds bit-exactly — the fused
+noisy paths then equal the PR-1 noiseless oracle bit-for-bit (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_model import (
+    TABLE1,
+    AnalogParams,
+    NoiseModel,
+    NOISELESS,
+    default_params,
+    hd_threshold,
+    knob_schedule,
+)
+
+
+# ---------------------------------------------------------------------------
+# Knob-space sensitivities and provenance
+# ---------------------------------------------------------------------------
+def vref_sensitivity(params: AnalogParams, v_ref, v_eval, v_st):
+    """Analytic ``d(m*)/dV_ref`` of the behavioural matchline model [HD/V].
+
+    ``m* = (C/k) ln(VDD/V_ref) / (g(V_eval) t_s(V_st))`` gives
+    ``d(m*)/dV_ref = -(C/k) / (V_ref g t_s)`` — finite (and negative) even
+    at the exact-match point V_ref = VDD where m* itself is zero.
+    """
+    v_ref = jnp.asarray(v_ref, jnp.float32)
+    denom = params.g_rel(v_eval) * params.t_sample(v_st)
+    return -params.c_over_g / (jnp.maximum(v_ref, 1e-3) * denom)
+
+
+def anchor_knobs(threshold):
+    """Nearest Table-I operating point by HD tolerance (elementwise).
+
+    The knob provenance used when a caller supplies a bare threshold with
+    no schedule (e.g. `cam.CAMArray.search`).  Traceable jnp arithmetic:
+    returns (v_ref, v_eval, v_st) arrays broadcast like `threshold` [V].
+    """
+    thr = jnp.asarray(threshold, jnp.float32)
+    anchors_hd = jnp.asarray(TABLE1[:, 3], jnp.float32)
+    idx = jnp.argmin(jnp.abs(thr[..., None] - anchors_hd), axis=-1)
+    knobs = jnp.asarray(TABLE1[:, :3] / 1e3, jnp.float32)[idx]
+    return knobs[..., 0], knobs[..., 1], knobs[..., 2]
+
+
+@functools.lru_cache(maxsize=8)
+def _schedule_cached(n_passes: int, sweep_max: int):
+    """Table-I-calibrated knob schedule, cached per (P, sweep span)."""
+    knobs, achieved = knob_schedule(n_passes, sweep_max)
+    return np.asarray(knobs, np.float32), np.asarray(achieved, np.float32)
+
+
+def achieved_sweep(n_passes: int, sweep_max: int) -> np.ndarray:
+    """The knob schedule's *achieved* calibrated logical tolerances [P].
+
+    What the analog knobs actually deliver (under the per-die calibrated
+    model) when asked for the ideal sweep ``linspace(0, sweep_max, P)`` —
+    used by `ensemble.build_head(calibrated=True)` to deploy thresholds
+    the silicon can realize instead of ideal integers.
+    """
+    return _schedule_cached(int(n_passes), int(sweep_max))[1]
+
+
+# ---------------------------------------------------------------------------
+# The one sampling core
+# ---------------------------------------------------------------------------
+def _sample_deltas(key, noise: NoiseModel, m_logical, dm_dvref,
+                   global_shape: tuple, n_rows: int):
+    """Threshold perturbations: the ONE place sigmas become randomness.
+
+    m_logical / dm_dvref : broadcastable to ``global_shape + (1,)`` (or
+        ``+ (n_rows,)``) — the logical tolerance magnitude the
+        multiplicative time-jitter acts on, and the V_ref sensitivity.
+    global_shape : shape of the pass-global draws — V_ref drift and strobe
+        jitter are shared by every row of one search (one MLSA reference,
+        one strobe per cycle).
+    n_rows : trailing per-row axis for the sigma_hd draw.
+
+    Returns float32 deltas of shape ``global_shape + (n_rows,)``.
+    """
+    kv, kt, kr = jax.random.split(key, 3)
+    dv = noise.sigma_vref * jax.random.normal(kv, global_shape + (1,))
+    tj = 1.0 + noise.sigma_tjitter * jax.random.normal(kt, global_shape + (1,))
+    row = noise.sigma_hd * jax.random.normal(kr, global_shape + (n_rows,))
+    return (
+        dm_dvref * dv
+        + m_logical * (1.0 / jnp.maximum(tj, 0.5) - 1.0)
+        + row
+        + noise.temp_drift_hd
+    )
+
+
+def sample_effective_threshold(
+    key: jax.Array,
+    params: AnalogParams,
+    noise: NoiseModel,
+    v_ref,
+    v_eval,
+    v_st,
+    shape=(),
+):
+    """Exact knob-space sampler: perturb the voltages, then convert to HD.
+
+    The reference (non-linearized) form used when the caller holds actual
+    knob voltages (`cam.CAMArray.search_knobs`); `_sample_deltas` is its
+    linearization around an operating point.  Moved verbatim from
+    ``NoiseModel.effective_threshold`` (which now delegates here).
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    v_ref_n = v_ref + noise.sigma_vref * jax.random.normal(k1, shape)
+    base = hd_threshold(params, v_ref_n, v_eval, v_st)
+    # time jitter scales m* multiplicatively: m* ~ 1/t_s
+    tj = 1.0 + noise.sigma_tjitter * jax.random.normal(k2, shape)
+    base = base / jnp.maximum(tj, 0.5)
+    row = noise.sigma_hd * jax.random.normal(k3, shape)
+    return base + row + noise.temp_drift_hd
+
+
+def sample_search_thresholds(
+    key: Optional[jax.Array],
+    threshold,
+    noise: NoiseModel,
+    shape: tuple,
+    params: Optional[AnalogParams] = None,
+):
+    """Effective thresholds for a single-pass CAM search (no schedule).
+
+    threshold : scalar or array broadcastable to `shape` ([..., n_rows]).
+    shape     : target shape; the last axis is the row axis (per-row
+                sigma_hd draws), leading axes are independent search
+                cycles (pass-global vref/strobe draws).
+
+    ``key=None`` or a noiseless model returns the base thresholds
+    broadcast — bit-exact noiseless limit.
+    """
+    t = jnp.broadcast_to(jnp.asarray(threshold, jnp.float32), shape)
+    if key is None or not noise.is_active:
+        return t
+    if noise.sigma_vref or noise.sigma_tjitter:
+        # knob provenance on the raw (usually scalar) threshold — it
+        # broadcasts against the delta shapes, no need to materialize
+        # per-element anchors over [..., n_rows]
+        params = params or default_params()
+        t_raw = jnp.asarray(threshold, jnp.float32)
+        vr, ve, vs = anchor_knobs(t_raw)
+        m_logical = t_raw
+        dm_dvref = vref_sensitivity(params, vr, ve, vs)
+    else:  # only per-row noise / drift active: no knob-space terms
+        m_logical = jnp.float32(0.0)
+        dm_dvref = jnp.float32(0.0)
+    delta = _sample_deltas(
+        key, noise,
+        m_logical=m_logical,
+        dm_dvref=dm_dvref,
+        global_shape=shape[:-1],
+        n_rows=shape[-1],
+    )
+    return t + delta
+
+
+# ---------------------------------------------------------------------------
+# SearchPhysics: schedule-aware physics for the Algorithm-1 ensemble head
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SearchPhysics:
+    """AnalogParams + NoiseModel + per-pass knob provenance, bundled.
+
+    The single source of truth for the Algorithm-1 threshold sweep under
+    PVT noise: `sample()` is the only producer of effective per-pass HD
+    thresholds consumed by `ensemble`, `pipeline`, and both kernels.
+
+    thresholds : [P] float32 base HD-space thresholds (as deployed).
+    m_logical  : [P] float32 logical tolerance per pass (knob-achieved) —
+                 the magnitude the multiplicative strobe jitter acts on.
+    dm_dvref   : [P] float32 d(m*)/dV_ref at each pass's knob point [HD/V].
+    noise      : the PVT model; params: the analog constants (None when
+                 the knob-space sigmas are inactive and never needed).
+    """
+
+    thresholds: jnp.ndarray
+    m_logical: jnp.ndarray
+    dm_dvref: jnp.ndarray
+    noise: NoiseModel
+    params: Optional[AnalogParams] = None
+
+    @property
+    def n_passes(self) -> int:
+        return int(self.thresholds.shape[0])
+
+    @property
+    def is_noiseless(self) -> bool:
+        return not self.noise.is_active
+
+    @classmethod
+    def for_sweep(
+        cls,
+        thresholds_hd,
+        noise: NoiseModel = NOISELESS,
+        params: Optional[AnalogParams] = None,
+    ) -> "SearchPhysics":
+        """Physics for an Algorithm-1 threshold schedule (HD space).
+
+        Knob provenance: the Table-I-calibrated `knob_schedule` over the
+        sweep's logical span (cached) when the schedule is equispaced
+        (the paper's sweep; `knob_schedule` targets exactly that
+        linspace); otherwise the nearest-Table-I-anchor fallback per
+        pass.  The provenance is only computed when a knob-space sigma
+        (vref / tjitter) is active; a pure sigma_hd / drift model — and
+        the noiseless limit — skips it, and that path stays jit/vmap
+        traceable with `thresholds_hd` as a traced array.  The
+        knob-active path needs CONCRETE thresholds (the schedule
+        inversion runs on host): prebuild the physics outside jit and
+        pass it in (`votes_faithful(..., physics=...)`).
+        """
+        knob_active = bool(noise.sigma_vref or noise.sigma_tjitter)
+        if not knob_active:
+            t = jnp.asarray(thresholds_hd, jnp.float32)  # tracer-safe
+            zero = jnp.zeros_like(t)
+            return cls(thresholds=t, m_logical=zero, dm_dvref=zero,
+                       noise=noise, params=params)
+        if isinstance(thresholds_hd, jax.core.Tracer):
+            raise TypeError(
+                "SearchPhysics.for_sweep with sigma_vref/sigma_tjitter "
+                "active needs concrete thresholds (host-side knob-"
+                "schedule inversion); build the SearchPhysics outside "
+                "jit and pass it via the physics= argument"
+            )
+        t = np.asarray(thresholds_hd, np.float32)
+        span = float(t.max() - t.min()) if t.size else 0.0
+        params = params or default_params()
+        logical = t - (t.min() if t.size else 0.0)
+        equispaced = t.size >= 2 and span > 0 and np.allclose(
+            logical, np.linspace(0.0, span, t.size), atol=1e-3
+        )
+        if equispaced:
+            knobs, achieved = _schedule_cached(t.size, int(round(span)))
+            m_log = achieved
+            dmdv = np.asarray(
+                vref_sensitivity(
+                    params, knobs[:, 0], knobs[:, 1], knobs[:, 2]
+                ),
+                np.float32,
+            )
+        else:  # degenerate / non-uniform sweep: nearest-anchor provenance
+            vr, ve, vs = anchor_knobs(logical)
+            m_log = np.asarray(logical, np.float32)
+            dmdv = np.asarray(
+                vref_sensitivity(params, vr, ve, vs), np.float32
+            )
+        return cls(
+            thresholds=jnp.asarray(t, jnp.float32),
+            m_logical=jnp.asarray(m_log, jnp.float32),
+            dm_dvref=jnp.asarray(dmdv, jnp.float32),
+            noise=noise,
+            params=params,
+        )
+
+    @classmethod
+    def for_head(
+        cls,
+        head,
+        noise: NoiseModel = NOISELESS,
+        params: Optional[AnalogParams] = None,
+    ) -> "SearchPhysics":
+        """Physics for a deployed `ensemble.CAMEnsembleHead`."""
+        return cls.for_sweep(head.thresholds, noise, params)
+
+    def sample(
+        self,
+        key: Optional[jax.Array],
+        batch_shape: tuple = (),
+        n_rows: int = 1,
+    ) -> jnp.ndarray:
+        """Sampled effective thresholds ``[P, *batch_shape, n_rows]``.
+
+        Each (pass, batch element) is one silicon search cycle: the vref
+        and strobe draws are shared across its `n_rows` rows; sigma_hd is
+        drawn per row.  ``key=None`` or a noiseless model returns the base
+        schedule broadcast — the bit-exact noiseless limit.
+        """
+        p = self.n_passes
+        lead = (p,) + (1,) * len(batch_shape)
+        base = self.thresholds.reshape(lead + (1,))
+        shape = (p,) + tuple(batch_shape) + (n_rows,)
+        if key is None or self.is_noiseless:
+            return jnp.broadcast_to(base, shape)
+        delta = _sample_deltas(
+            key, self.noise,
+            m_logical=self.m_logical.reshape(lead + (1,)),
+            dm_dvref=self.dm_dvref.reshape(lead + (1,)),
+            global_shape=(p,) + tuple(batch_shape),
+            n_rows=n_rows,
+        )
+        return base + delta

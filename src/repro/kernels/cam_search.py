@@ -15,6 +15,10 @@ The threshold vector (33 int32) is broadcast to every grid cell as a
 whole-array block; HD temporaries never leave VMEM — the fusion removes
 32/33 of the array reads, the TPU translation of the paper's observation
 that re-tuning is the expensive step worth amortizing (Sec. V-B).
+
+Silicon mode (DESIGN.md §8): `thr_samples` swaps the shared schedule for
+a [B, C, P] float32 block of noise-sampled thresholds (from
+`core/physics.SearchPhysics.sample`); randomness never enters the kernel.
 """
 
 from __future__ import annotations
@@ -28,8 +32,14 @@ from jax.experimental import pallas as pl
 from repro.kernels.binary_gemm import _pad_axis
 
 
-def _cam_vote_kernel(q_ref, rows_ref, thr_ref, out_ref, *, chunk: int):
-    """votes[bq, bc] for one (query-block, class-block) grid cell."""
+def _cam_vote_kernel(q_ref, rows_ref, thr_ref, out_ref, *, chunk: int,
+                     noisy: bool = False):
+    """votes[bq, bc] for one (query-block, class-block) grid cell.
+
+    noisy=True: thr_ref is a [bq, bc, P] float32 block of noise-sampled
+    per-(query, row, pass) thresholds (physics.SearchPhysics.sample output)
+    instead of the shared [P] schedule — the HD is still computed once.
+    """
     kw = q_ref.shape[-1]
     n_chunks = kw // chunk
 
@@ -43,8 +53,16 @@ def _cam_vote_kernel(q_ref, rows_ref, thr_ref, out_ref, *, chunk: int):
     hd = jax.lax.fori_loop(
         0, n_chunks, body, jnp.zeros(out_ref.shape, jnp.int32)
     )
-    thr = thr_ref[...]  # [P] int32
-    votes = (hd[:, :, None] <= thr[None, None, :]).astype(jnp.int32).sum(-1)
+    if noisy:
+        thr = thr_ref[...]  # [bq, bc, P] float32 sampled thresholds
+        votes = (hd[:, :, None].astype(jnp.float32) <= thr).astype(
+            jnp.int32
+        ).sum(-1)
+    else:
+        thr = thr_ref[...]  # [P] HD tolerances
+        votes = (hd[:, :, None] <= thr[None, None, :]).astype(
+            jnp.int32
+        ).sum(-1)
     out_ref[...] = votes
 
 
@@ -60,12 +78,17 @@ def cam_vote(
     bc: int = 128,
     chunk: int = 8,
     interpret: bool = False,
+    thr_samples: jax.Array | None = None,
 ) -> jax.Array:
     """Fused Algorithm-1 vote counts.
 
     q_packed    : [B, Kw] uint32 packed queries (bias searchlines included)
     rows_packed : [C, Kw] uint32 packed class rows (bias cells included)
-    thresholds  : [P] int32 HD tolerances (any order)
+    thresholds  : [P] HD tolerances (any order; int or calibrated float)
+    thr_samples : optional [B, C, P] float32 noise-sampled thresholds
+                  (physics.SearchPhysics.sample output, moveaxis'd) — the
+                  silicon-noise path; replaces `thresholds` in the compare
+                  while the HD-once amortization is unchanged
     returns     : [B, C] int32 votes
     """
     q, b0 = _pad_axis(q_packed, 0, bq)
@@ -74,19 +97,36 @@ def cam_vote(
     r, _ = _pad_axis(r, 1, chunk)
     b, kw = q.shape
     c = r.shape[0]
-    thr = thresholds.astype(jnp.int32)
+    if jnp.issubdtype(thresholds.dtype, jnp.floating):
+        thr = thresholds.astype(jnp.float32)
+    else:
+        thr = thresholds.astype(jnp.int32)
     p = thr.shape[0]
     grid = (b // bq, c // bc)
+    noisy = thr_samples is not None
+    if noisy:
+        if thr_samples.shape != (q_packed.shape[0], rows_packed.shape[0], p):
+            raise ValueError(
+                f"thr_samples shape {thr_samples.shape} != "
+                f"[{q_packed.shape[0]}, {rows_packed.shape[0]}, {p}]"
+            )
+        ts, _ = _pad_axis(thr_samples.astype(jnp.float32), 0, bq)
+        ts, _ = _pad_axis(ts, 1, bc)
+        thr_operand = ts
+        thr_spec = pl.BlockSpec((bq, bc, p), lambda i, j: (i, j, 0))
+    else:
+        thr_operand = thr
+        thr_spec = pl.BlockSpec((p,), lambda i, j: (0,))
     out = pl.pallas_call(
-        functools.partial(_cam_vote_kernel, chunk=chunk),
+        functools.partial(_cam_vote_kernel, chunk=chunk, noisy=noisy),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bq, kw), lambda i, j: (i, 0)),
             pl.BlockSpec((bc, kw), lambda i, j: (j, 0)),
-            pl.BlockSpec((p,), lambda i, j: (0,)),
+            thr_spec,
         ],
         out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
         interpret=interpret,
-    )(q, r, thr)
+    )(q, r, thr_operand)
     return out[:b0, :c0]

@@ -26,6 +26,12 @@ the VMEM working-set budget is derived in DESIGN.md §4.
 
 Correctness bar (tests/test_pipeline.py): bit-exact against the
 `bnn.folded_forward_exact` + `ensemble.votes_fused` digital oracle.
+
+Silicon mode (DESIGN.md §8): the head vote optionally consumes a
+precomputed [B, C, P] float32 block of noise-sampled per-pass thresholds
+(`thr_samples`, produced by `core/physics.SearchPhysics.sample` outside
+the kernel) — the HD-once/compare-P-times amortization is unchanged and
+the kernel stays deterministic.
 """
 
 from __future__ import annotations
@@ -87,8 +93,16 @@ def _make_kernel(
     head_kw: int,
     bias_cells: int,
     chunk: int,
+    noisy: bool = False,
 ):
-    """Build the fused kernel body for a static layer stack."""
+    """Build the fused kernel body for a static layer stack.
+
+    noisy=True swaps the shared [P] int32 threshold operand for a
+    per-(query, class, pass) float32 sample block [bq, C, P] — the
+    precomputed output of `physics.SearchPhysics.sample` (the kernel
+    itself stays deterministic; all randomness is sampled outside).  The
+    HD-once / compare-P-times amortization is unchanged.
+    """
 
     def kernel(*refs):
         x_ref = refs[0]
@@ -120,9 +134,15 @@ def _make_kernel(
                 tail_kw,
             )
         head = head_ref[...]  # [C, head_kw] packed class rows (bias incl.)
-        thr = thr_ref[...]  # [P] int32 HD tolerances
         hd = _hd_block(q, head, chunk)
-        votes = (hd[:, :, None] <= thr[None, None, :]).astype(jnp.int32)
+        if noisy:
+            thr = thr_ref[...]  # [bq, C, P] float32 sampled thresholds
+            votes = (hd[:, :, None].astype(jnp.float32) <= thr).astype(
+                jnp.int32
+            )
+        else:
+            thr = thr_ref[...]  # [P] HD tolerances (shared by every query)
+            votes = (hd[:, :, None] <= thr[None, None, :]).astype(jnp.int32)
         out_ref[...] = votes.sum(-1)
 
     return kernel
@@ -149,6 +169,7 @@ def fused_mlp_votes(
     bq: int = 256,
     chunk: int = 4,
     interpret: bool = False,
+    thr_samples: jax.Array | None = None,
 ) -> jax.Array:
     """Fused end-to-end deployed-BNN vote counts.
 
@@ -157,9 +178,16 @@ def fused_mlp_votes(
     layer_cs    : per hidden layer [N_l] int32 folded BN constants
     layer_n_bits: per hidden layer logical input bit count
     head_rows   : [C, Kw_h] uint32 packed class rows (bias cells included)
-    thresholds  : [P] int32 HD tolerances (Algorithm 1 sweep)
+    thresholds  : [P] HD tolerances (Algorithm 1 sweep; int32 for the
+                  ideal sweep, float32 for calibrated knob-achieved values)
     bias_cells  : bias searchlines appended to the head query
-    returns     : [B, C] int32 vote counts (== ensemble.votes_fused)
+    thr_samples : optional [B, C, P] float32 noise-sampled per-pass
+                  thresholds (from `physics.SearchPhysics.sample`);
+                  replaces `thresholds` in the head compare — the
+                  silicon-noise fused path.  Sampling happens OUTSIDE the
+                  kernel; the kernel only consumes.
+    returns     : [B, C] int32 vote counts (== ensemble.votes_fused, or
+                  ensemble.votes_fused_noisy when thr_samples is given)
 
     With no hidden layers, `x_packed` must already be the head query
     (activation bits + bias drive bits), as built by `cam.query_with_bias`.
@@ -171,7 +199,10 @@ def fused_mlp_votes(
     x = _pad_words(x, chunk)
     head = _pad_words(head_rows, chunk)
     n_classes = head.shape[0]
-    thr = thresholds.astype(jnp.int32)
+    if jnp.issubdtype(thresholds.dtype, jnp.floating):
+        thr = thresholds.astype(jnp.float32)
+    else:
+        thr = thresholds.astype(jnp.int32)
 
     metas = []
     operands = [x]
@@ -188,8 +219,23 @@ def fused_mlp_votes(
         metas.append(_LayerMeta(n_bits=n_bits, n_out=w.shape[0], kw=w.shape[1]))
         operands += [w, c.astype(jnp.int32)]
         specs += [_whole(w.shape), _whole(c.shape)]
-    operands += [head, thr]
-    specs += [_whole(head.shape), _whole(thr.shape)]
+    noisy = thr_samples is not None
+    if noisy:
+        if thr_samples.shape[1:] != (n_classes, thr.shape[0]):
+            raise ValueError(
+                f"thr_samples shape {thr_samples.shape} != "
+                f"[B, {n_classes}, {thr.shape[0]}]"
+            )
+        ts, _ = _pad_axis(thr_samples.astype(jnp.float32), 0, bq)
+        p = ts.shape[-1]
+        operands += [head, ts]
+        specs += [
+            _whole(head.shape),
+            pl.BlockSpec((bq, n_classes, p), lambda i: (i, 0, 0)),
+        ]
+    else:
+        operands += [head, thr]
+        specs += [_whole(head.shape), _whole(thr.shape)]
 
     # shape discipline: the input must line up with its first operand —
     # a mismatch (e.g. a head-only query packed WITHOUT the bias drive
@@ -207,7 +253,7 @@ def fused_mlp_votes(
         for prev, nxt in zip(metas[:-1], metas[1:]):
             assert prev.n_out <= nxt.kw * WORD, (prev, nxt)
         assert metas[-1].n_out + bias_cells <= head.shape[1] * WORD
-    kernel = _make_kernel(metas, head.shape[1], bias_cells, chunk)
+    kernel = _make_kernel(metas, head.shape[1], bias_cells, chunk, noisy)
 
     out = pl.pallas_call(
         kernel,

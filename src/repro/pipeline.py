@@ -12,16 +12,37 @@ Semantics are bit-exact equal to the digital oracle
 (`bnn.folded_forward_exact` hidden layers + `ensemble.votes_fused` head);
 tests/test_pipeline.py asserts this across bank configurations.
 
+Silicon mode: `compile_pipeline(folded, cfg, noise=SILICON)` threads the
+unified device physics (`core/physics.SearchPhysics`) through the SAME
+fused program — per-pass effective thresholds are sampled as [P, B, C]
+float arrays (sigma_hd per row; sigma_vref / sigma_tjitter pass-global
+through the Table-I knob schedule; temp_drift_hd systematic) and only the
+head compare changes, so the HD-once/compare-33x amortization survives
+noise.  `votes(x, key=...)` draws one silicon realization;
+`votes_mc(x, key, n_samples)` vmaps the draw for Monte-Carlo evaluation
+with the Hamming distances computed ONCE across all samples;
+`cum_votes(x, key)` exposes the per-pass cumulative votes that noisy
+Fig.-5-style truncated sweeps need (`ensemble.sweep_from_votes` is
+noiseless-only — see its docstring).  With `noise=NOISELESS` every noisy
+entry point is bit-identical to the noiseless oracle (tested).
+
 Two fused implementations, selected by `impl` (default: by backend):
 
   pallas — kernels/fused_mlp.py: one kernel launch per batch block,
            hidden activations resident in VMEM (the TPU deployment path;
-           runs under interpret mode elsewhere, for semantics only).
+           runs under interpret mode elsewhere, for semantics only).  The
+           noisy path feeds the kernel a precomputed [B, C, P]
+           threshold-sample operand — randomness never enters the kernel.
   xla    — the same packed-domain math as a single jitted XLA program:
            activations stay uint32-packed between layers and the whole
            net fuses into one executable (the portable fast path — on
            CPU this is what beats the layer-by-layer unpacked flow; see
-           benchmarks/e2e_throughput.py).
+           benchmarks/e2e_throughput.py).  The noisy path broadcasts the
+           sampled [P, B, C] thresholds against the one HD computation.
+
+`votes_mc` / `cum_votes` always use the XLA-twin math (per-pass outputs
+do not fit the kernel's single [B, C] result block); the twins are
+bit-exact equal so this is a pure scheduling choice.
 
 Batch-size bucketing: inputs are zero-padded up to the next bucket
 (powers of two, floor `min_bucket`) so a serving loop with ragged batch
@@ -32,7 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +61,9 @@ import numpy as np
 
 from repro.core import binarize
 from repro.core.bnn import FoldedLayer
+from repro.core.device_model import NoiseModel
 from repro.core.ensemble import CAMEnsembleHead, EnsembleConfig, build_head
+from repro.core.physics import SearchPhysics
 from repro.kernels import fused_mlp
 
 
@@ -52,13 +75,15 @@ def next_bucket(n: int, min_bucket: int = 64) -> int:
     return b
 
 
-def _votes_xla(x_packed, layer_ws, layer_cs, layer_n_bits, head_rows,
-               thresholds, bias_cells: int):
-    """Packed-domain fused forward as straight-line jnp (one XLA program).
+def _head_hd_xla(x_packed, layer_ws, layer_cs, layer_n_bits, head_rows,
+                 bias_cells: int):
+    """Packed-domain fused forward up to the head Hamming distances.
 
     Same math as the Pallas kernel: XNOR-popcount matvec + C + sign +
-    repack per hidden layer, multi-threshold vote at the head.  Bit-exact
-    equal to `fused_mlp.fused_mlp_votes` (integer arithmetic throughout).
+    repack per hidden layer, then HD of the (bias-appended) head query
+    against every class row.  Returns [B, C] int32 — the one quantity
+    every vote path (noiseless, noisy, Monte-Carlo, cumulative) compares
+    thresholds against.
     """
     q = x_packed
     n_layers = len(layer_ws)
@@ -74,7 +99,19 @@ def _votes_xla(x_packed, layer_ws, layer_cs, layer_n_bits, head_rows,
         kw_next = (head_rows if i + 1 == n_layers else layer_ws[i + 1]).shape[1]
         if q.shape[1] < kw_next:
             q = jnp.pad(q, ((0, 0), (0, kw_next - q.shape[1])))
-    hd = binarize.hamming_packed(q[:, None, :], head_rows)
+    return binarize.hamming_packed(q[:, None, :], head_rows)
+
+
+def _votes_xla(x_packed, layer_ws, layer_cs, layer_n_bits, head_rows,
+               thresholds, bias_cells: int):
+    """Noiseless fused votes as straight-line jnp (one XLA program).
+
+    Bit-exact equal to `fused_mlp.fused_mlp_votes` (integer arithmetic
+    throughout; calibrated float thresholds compare exactly too).
+    """
+    hd = _head_hd_xla(
+        x_packed, layer_ws, layer_cs, layer_n_bits, head_rows, bias_cells
+    )
     return (hd[:, :, None] <= thresholds[None, None, :]).astype(
         jnp.int32
     ).sum(-1)
@@ -90,33 +127,98 @@ class CompiledPipeline:
     impl: str
     min_bucket: int
     head_only: bool  # no hidden layers: input feeds the CAM head directly
-    _votes_packed: callable  # [Bp, Kw0] uint32 -> [Bp, C] int32 (jitted)
+    physics: Optional[SearchPhysics]  # None <=> compiled without noise=
+    _votes_packed: Callable  # [Bp, Kw0] uint32 -> [Bp, C] int32 (jitted)
+    _votes_noisy_packed: Optional[Callable] = None  # (x, key) -> [Bp, C]
+    _votes_mc_packed: Optional[Callable] = None  # (x, key, S) -> [S, Bp, C]
+    _cum_votes_packed: Optional[Callable] = None  # (x, key) -> [P, Bp, C]
 
-    def votes(self, x_pm1: jax.Array) -> jax.Array:
-        """Vote counts for a ±1 input batch [B, n_in] -> [B, C] int32."""
+    def _pack_input(self, x_pm1: jax.Array) -> jax.Array:
         x_pm1 = jnp.asarray(x_pm1)
         if self.head_only:
             from repro.core.cam import query_with_bias
 
-            x_packed = query_with_bias(x_pm1, self.head.bias_cells)
-        else:
-            x_packed = binarize.pack_pm1(x_pm1)
-        return self.votes_packed(x_packed)
+            return query_with_bias(x_pm1, self.head.bias_cells)
+        return binarize.pack_pm1(x_pm1)
 
-    def votes_packed(self, x_packed: jax.Array) -> jax.Array:
-        """Vote counts for an already-packed input batch [B, Kw0]."""
+    def _bucketed(self, x_packed: jax.Array):
         b = x_packed.shape[0]
         bp = next_bucket(b, self.min_bucket)
         if bp != b:
             x_packed = jnp.pad(x_packed, ((0, bp - b), (0, 0)))
-        return self._votes_packed(x_packed)[:b]
+        return x_packed, b
 
-    def predict(self, x_pm1: jax.Array) -> jax.Array:
+    def _require_physics(self, what: str) -> SearchPhysics:
+        if self.physics is None:
+            raise ValueError(
+                f"{what} needs a silicon-mode pipeline: recompile with "
+                "compile_pipeline(..., noise=<NoiseModel>)"
+            )
+        return self.physics
+
+    def votes(self, x_pm1: jax.Array, key: Optional[jax.Array] = None):
+        """Vote counts for a ±1 input batch [B, n_in] -> [B, C] int32.
+
+        With `key` (requires a `noise=`-compiled pipeline) the votes are
+        one silicon-noise realization; with the NOISELESS model this path
+        is bit-identical to the noiseless one.
+        """
+        return self.votes_packed(self._pack_input(x_pm1), key)
+
+    def votes_packed(self, x_packed: jax.Array,
+                     key: Optional[jax.Array] = None) -> jax.Array:
+        """Vote counts for an already-packed input batch [B, Kw0]."""
+        x_packed, b = self._bucketed(x_packed)
+        if key is None:
+            return self._votes_packed(x_packed)[:b]
+        self._require_physics("votes(key=...)")
+        return self._votes_noisy_packed(x_packed, key)[:b]
+
+    def votes_mc(self, x_pm1: jax.Array, key: jax.Array,
+                 n_samples: int) -> jax.Array:
+        """Monte-Carlo silicon-noise votes: [n_samples, B, C] int32.
+
+        One fused program: the packed forward + Hamming distances run
+        ONCE, then `n_samples` independent threshold realizations are
+        drawn (vmapped) and compared in-register — this is what replaces
+        `n_samples` sequential `votes_faithful` sweeps (benchmarks record
+        the speedup in BENCH_noise.json).
+        """
+        self._require_physics("votes_mc")
+        x_packed, b = self._bucketed(self._pack_input(x_pm1))
+        return self._votes_mc_packed(x_packed, key, int(n_samples))[:, :b]
+
+    def cum_votes(self, x_pm1: jax.Array,
+                  key: Optional[jax.Array] = None) -> jax.Array:
+        """Per-pass cumulative votes [P, B, C] under one noise draw.
+
+        The silicon-conditioned replacement for
+        `ensemble.sweep_from_votes` (which is valid ONLY noiseless):
+        per-pass match indicators are materialized from the sampled
+        thresholds and cumsum'd, at fused speed.  key=None is allowed
+        only on a NOISELESS-compiled pipeline (where it gives the exact
+        staircase, == sweep_from_votes of the fused total); a noisy
+        pipeline must be given a key explicitly.
+        """
+        phys = self._require_physics("cum_votes")
+        x_packed, b = self._bucketed(self._pack_input(x_pm1))
+        if key is None:
+            if not phys.is_noiseless:
+                raise ValueError(
+                    "cum_votes on a noise-compiled pipeline needs an "
+                    "explicit key (each call is one silicon realization)"
+                )
+            key = jax.random.PRNGKey(0)  # ignored by the NOISELESS sampler
+        return self._cum_votes_packed(x_packed, key)[:, :b]
+
+    def predict(self, x_pm1: jax.Array,
+                key: Optional[jax.Array] = None) -> jax.Array:
         """Algorithm 1 prediction: per-class majority vote -> argmax."""
-        return jnp.argmax(self.votes(x_pm1), axis=-1)
+        return jnp.argmax(self.votes(x_pm1, key), axis=-1)
 
-    def __call__(self, x_pm1: jax.Array) -> jax.Array:
-        return self.predict(x_pm1)
+    def __call__(self, x_pm1: jax.Array,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+        return self.predict(x_pm1, key)
 
 
 def compile_pipeline(
@@ -128,6 +230,8 @@ def compile_pipeline(
     chunk: int = 4,
     min_bucket: int = 64,
     interpret: bool | None = None,
+    noise: NoiseModel | None = None,
+    params=None,
 ) -> CompiledPipeline:
     """Compile a folded BNN + ensemble head into a fused batch classifier.
 
@@ -136,6 +240,12 @@ def compile_pipeline(
     impl    : "pallas" | "xla" | None (auto: pallas on TPU, xla elsewhere —
               the Pallas kernel only *executes* off-TPU in interpret mode,
               which is for semantics tests, not speed).
+    noise   : optional NoiseModel — compiles the silicon-mode twins
+              (votes(key=), votes_mc, cum_votes) with a SearchPhysics
+              bundle built from the head's threshold schedule; `params`
+              optionally overrides the AnalogParams.  noise=None keeps
+              the pipeline noiseless-only (no knob-schedule work at
+              compile time).
     """
     ens_cfg = ens_cfg or EnsembleConfig()
     if len(folded) < 1:
@@ -149,6 +259,7 @@ def compile_pipeline(
 
     hidden, out_layer = list(folded[:-1]), folded[-1]
     head = build_head(out_layer, ens_cfg)
+    n_classes = head.n_classes
 
     layer_ws = tuple(
         binarize.pack_bits(jnp.asarray((l.weights_pm1 > 0).astype(np.uint8)))
@@ -159,6 +270,25 @@ def compile_pipeline(
     head_rows = head.cam.rows_packed
     thresholds = head.thresholds
 
+    phys = None
+    if noise is not None:
+        phys = SearchPhysics.for_head(head, noise, params)
+
+    # chunk-padded operands for the XLA-twin math (also backs the
+    # Monte-Carlo / cumulative paths of a pallas-impl pipeline)
+    ws = tuple(fused_mlp._pad_words(w, chunk) for w in layer_ws)
+    hr = fused_mlp._pad_words(head_rows, chunk)
+
+    def _hd_xla(x_packed):
+        kw0 = (ws[0] if ws else hr).shape[1]
+        if x_packed.shape[1] < kw0:
+            x_packed = jnp.pad(
+                x_packed, ((0, 0), (0, kw0 - x_packed.shape[1]))
+            )
+        return _head_hd_xla(
+            x_packed, ws, layer_cs, layer_n_bits, hr, head.bias_cells
+        )
+
     if impl == "pallas":
         def votes_packed_fn(x_packed):
             return fused_mlp.fused_mlp_votes(
@@ -167,12 +297,20 @@ def compile_pipeline(
                 bias_cells=head.bias_cells, bq=bq, chunk=chunk,
                 interpret=interpret,
             )
-    else:
-        # zero-pad every packed operand pair to a common word width once,
-        # at compile time, so the jitted program has no ragged shapes
-        ws = [fused_mlp._pad_words(w, chunk) for w in layer_ws]
-        hr = fused_mlp._pad_words(head_rows, chunk)
 
+        @jax.jit
+        def votes_noisy_packed_fn(x_packed, key):
+            t = phys.sample(
+                key, batch_shape=(x_packed.shape[0],), n_rows=n_classes
+            )  # [P, B, C]
+            return fused_mlp.fused_mlp_votes(
+                x_packed, layer_ws, layer_cs, layer_n_bits,
+                head_rows, thresholds,
+                bias_cells=head.bias_cells, bq=bq, chunk=chunk,
+                interpret=interpret,
+                thr_samples=jnp.moveaxis(t, 0, -1),  # [B, C, P] operand
+            )
+    else:
         @jax.jit
         def votes_packed_fn(x_packed):
             kw0 = (ws[0] if ws else hr).shape[1]
@@ -185,12 +323,43 @@ def compile_pipeline(
                 head.bias_cells,
             )
 
+        @jax.jit
+        def votes_noisy_packed_fn(x_packed, key):
+            hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C]
+            t = phys.sample(
+                key, batch_shape=(hd.shape[0],), n_rows=n_classes
+            )  # [P, B, C]
+            return (hd[None] <= t).astype(jnp.int32).sum(0)
+
+    votes_mc_packed_fn = cum_votes_packed_fn = None
+    if phys is not None:
+        @functools.partial(jax.jit, static_argnames=("n_samples",))
+        def votes_mc_packed_fn(x_packed, key, n_samples: int):
+            hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C] — ONCE
+
+            def one(k):
+                t = phys.sample(k, (hd.shape[0],), n_classes)  # [P, B, C]
+                return (hd[None] <= t).astype(jnp.int32).sum(0)
+
+            return jax.vmap(one)(jax.random.split(key, n_samples))
+
+        @jax.jit
+        def cum_votes_packed_fn(x_packed, key):
+            hd = _hd_xla(x_packed).astype(jnp.float32)
+            t = phys.sample(key, (hd.shape[0],), n_classes)  # [P, B, C]
+            return jnp.cumsum((hd[None] <= t).astype(jnp.int32), axis=0)
+
     return CompiledPipeline(
         head=head,
         n_in=int(hidden[0].n_in) if hidden else int(out_layer.n_in),
-        n_classes=head.n_classes,
+        n_classes=n_classes,
         impl=impl,
         min_bucket=min_bucket,
         head_only=not hidden,
+        physics=phys,
         _votes_packed=votes_packed_fn,
+        _votes_noisy_packed=votes_noisy_packed_fn if phys is not None
+        else None,
+        _votes_mc_packed=votes_mc_packed_fn,
+        _cum_votes_packed=cum_votes_packed_fn,
     )

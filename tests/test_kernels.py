@@ -75,6 +75,31 @@ def test_cam_vote_vs_ref(b, c, k, p):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_cam_vote_sampled_thresholds_vs_ref():
+    """The silicon-noise operand path: a [B, C, P] float32 block of
+    physics-sampled thresholds replaces the shared schedule; HD is still
+    computed once.  Against the dense jnp compare, and bit-equal to the
+    schedule path when the samples ARE the (broadcast) schedule."""
+    rng = np.random.default_rng(41)
+    b, c, k, p = 21, 13, 192, 9
+    q, rows = _pack(rng, b, k), _pack(rng, c, k)
+    thr = jnp.asarray(rng.integers(0, k + 1, p).astype(np.int32))
+    samples = jnp.asarray(
+        rng.normal(k / 2, 8.0, (b, c, p)).astype(np.float32))
+    got = ops.cam_vote(q, rows, thr, bq=16, bc=16, chunk=4,
+                       thr_samples=samples)
+    hd = np.asarray(ref.binary_gemm_hd_ref(q, rows)).astype(np.float32)
+    want = (hd[:, :, None] <= np.asarray(samples)).sum(-1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    base = jnp.broadcast_to(
+        thr.astype(jnp.float32)[None, None, :], (b, c, p))
+    np.testing.assert_array_equal(
+        np.asarray(ops.cam_vote(q, rows, thr, bq=16, bc=16, chunk=4,
+                                thr_samples=base)),
+        np.asarray(ops.cam_vote(q, rows, thr, bq=16, bc=16, chunk=4)),
+    )
+
+
 def test_mxu_path_matches_packed_path():
     rng = np.random.default_rng(0)
     xb = rng.integers(0, 2, (24, 160)).astype(np.uint8)

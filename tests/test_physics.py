@@ -1,0 +1,257 @@
+"""Unified search physics: single-source-of-truth noise semantics.
+
+The regression surface of the silicon-mode refactor: every sigma of
+`NoiseModel` must individually perturb every noisy path (the PR-1 "dead
+noise gates" tested sigma_vref / sigma_tjitter but never applied them),
+the noiseless limit of every path must be bit-exact, the pass-global vs
+per-row draw structure must match the hardware (one MLSA reference / one
+strobe per search; per-row mismatch), and the fused-noisy vote
+distribution must agree with the faithful 33-search flow.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binarize, bnn, ensemble, physics
+from repro.core.cam import CAMArray, query_with_bias
+from repro.core.device_model import NOISELESS, SILICON, NoiseModel
+
+ZERO = NoiseModel(sigma_hd=0.0, sigma_vref=0.0, sigma_tjitter=0.0,
+                  temp_drift_hd=0.0)
+SIGMAS = {
+    "sigma_hd": 2.0,
+    "sigma_vref": 0.05,
+    "sigma_tjitter": 0.1,
+    "temp_drift_hd": 3.0,
+}
+
+
+def _one_sigma(name):
+    return dataclasses.replace(ZERO, **{name: SIGMAS[name]})
+
+
+def _random_head(seed=0, n_classes=10, n_in=128):
+    rng = np.random.default_rng(seed)
+    layer = bnn.FoldedLayer(
+        weights_pm1=rng.choice([-1, 1], (n_classes, n_in)).astype(np.int8),
+        c=rng.integers(-30, 31, n_classes),
+    )
+    cfg = ensemble.EnsembleConfig()
+    return ensemble.build_head(layer, cfg), cfg
+
+
+# ---------------------------------------------------------------------------
+# Sampler semantics
+# ---------------------------------------------------------------------------
+def test_noiseless_sample_is_base_schedule():
+    head, _ = _random_head()
+    phys = physics.SearchPhysics.for_head(head, NOISELESS)
+    t = np.asarray(phys.sample(jax.random.PRNGKey(0), (4,), 10))
+    base = np.asarray(head.thresholds, np.float32)
+    assert t.shape == (33, 4, 10)
+    np.testing.assert_array_equal(t, np.broadcast_to(
+        base[:, None, None], t.shape))
+    # key=None takes the same deterministic path
+    np.testing.assert_array_equal(np.asarray(phys.sample(None, (4,), 10)), t)
+
+
+def test_silicon_sample_mean_tracks_base():
+    head, _ = _random_head()
+    phys = physics.SearchPhysics.for_head(head, SILICON)
+    t = np.asarray(phys.sample(jax.random.PRNGKey(0), (2000,), 10))
+    base = np.asarray(head.thresholds, np.float32)
+    # mean over the MC axis concentrates on the base schedule (the jitter
+    # term 1/(1+eps) has a small positive bias ~sigma^2; tolerance covers)
+    err = np.abs(t.mean(axis=(1, 2)) - base)
+    assert err.max() < 2.5, err
+
+
+def test_pass_global_vs_per_row_draw_structure():
+    """vref/strobe draws are shared across rows of one search; sigma_hd
+    is drawn per row — the hardware's noise topology."""
+    head, _ = _random_head()
+    key = jax.random.PRNGKey(1)
+    for name in ("sigma_vref", "sigma_tjitter"):
+        phys = physics.SearchPhysics.for_head(head, _one_sigma(name))
+        t = np.asarray(phys.sample(key, (8,), 10))
+        # within one (pass, batch) search, all rows see the same threshold
+        assert np.ptp(t, axis=-1).max() < 1e-5, name
+        # ... but the draws differ across searches
+        assert t.std() > 0, name
+    phys = physics.SearchPhysics.for_head(head, _one_sigma("sigma_hd"))
+    t = np.asarray(phys.sample(key, (8,), 10))
+    assert np.ptp(t, axis=-1).min() > 0  # per-row variation in every search
+
+
+def test_temp_drift_is_deterministic_offset():
+    head, _ = _random_head()
+    phys = physics.SearchPhysics.for_head(head, _one_sigma("temp_drift_hd"))
+    t = np.asarray(phys.sample(jax.random.PRNGKey(0), (4,), 10))
+    base = np.asarray(head.thresholds, np.float32)[:, None, None]
+    np.testing.assert_allclose(
+        t, np.broadcast_to(base + SIGMAS["temp_drift_hd"], t.shape),
+        rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dead-gate regressions: each sigma individually perturbs every consumer
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(SIGMAS))
+def test_each_sigma_perturbs_cam_search(name):
+    rng = np.random.default_rng(3)
+    cam = CAMArray.from_bits(rng.integers(0, 2, (64, 128)).astype(np.uint8))
+    q = binarize.pack_bits(
+        jnp.asarray(rng.integers(0, 2, (16, 128)).astype(np.uint8)))
+    clean = np.asarray(cam.search(q, 60))
+    noisy = np.asarray(
+        cam.search(q, 60, noise=_one_sigma(name), key=jax.random.PRNGKey(0)))
+    assert (clean != noisy).any(), name
+    # and the noiseless model with a key stays bit-exact
+    np.testing.assert_array_equal(
+        clean, np.asarray(cam.search(q, 60, noise=ZERO,
+                                     key=jax.random.PRNGKey(0))))
+
+
+@pytest.mark.parametrize("name", sorted(SIGMAS))
+def test_each_sigma_perturbs_votes_faithful(name):
+    head, _ = _random_head(5)
+    x = binarize.random_pm1(jax.random.PRNGKey(2), (16, 128))
+    clean = np.asarray(ensemble.votes_faithful(head, x))
+    noisy = np.asarray(ensemble.votes_faithful(
+        head, x, noise=_one_sigma(name), key=jax.random.PRNGKey(0)))
+    assert (clean != noisy).any(), name
+
+
+@pytest.mark.parametrize("name", sorted(SIGMAS))
+def test_each_sigma_perturbs_accuracy_sweep(name):
+    head, cfg = _random_head(7)
+    x = binarize.random_pm1(jax.random.PRNGKey(4), (64, 128))
+    labels = np.asarray(ensemble.votes_fused(head, x)).argmax(-1)
+    clean = ensemble.accuracy_sweep(head, x, labels, cfg)
+    ncfg = dataclasses.replace(cfg, noise=_one_sigma(name))
+    noisy = ensemble.accuracy_sweep(
+        head, x, labels, ncfg, key=jax.random.PRNGKey(0))
+    assert any(
+        clean[p]["top1"] != noisy[p]["top1"] for p in clean
+    ), name
+
+
+def test_search_knobs_each_sigma_perturbs():
+    rng = np.random.default_rng(9)
+    cam = CAMArray.from_bits(rng.integers(0, 2, (32, 64)).astype(np.uint8))
+    q = binarize.pack_bits(
+        jnp.asarray(rng.integers(0, 2, (8, 64)).astype(np.uint8)))
+    clean = np.asarray(cam.search_knobs(q, 0.95, 0.525, 1.1))
+    for name in sorted(SIGMAS):
+        noisy = np.asarray(cam.search_knobs(
+            q, 0.95, 0.525, 1.1, noise=_one_sigma(name),
+            key=jax.random.PRNGKey(1)))
+        assert (clean != noisy).any(), name
+
+
+# ---------------------------------------------------------------------------
+# Fused-noisy vs faithful: same distribution (the LLN mechanism)
+# ---------------------------------------------------------------------------
+def test_fused_noisy_matches_faithful_distribution():
+    """Per-class vote mean/std of the fused-noisy path agree with the
+    33-sequential-search faithful flow under SILICON within Monte-Carlo
+    tolerance (seeded, >= 1k trials each)."""
+    head, _ = _random_head(11)
+    x = binarize.random_pm1(jax.random.PRNGKey(6), (4, 128))
+    phys = physics.SearchPhysics.for_head(head, SILICON)
+    n = 1024
+
+    def faithful(k):
+        return ensemble.votes_faithful(head, x, key=k, physics=phys)
+
+    def fused(k):
+        return ensemble.votes_fused_noisy(head, x, key=k, physics=phys)
+
+    kf = jax.random.split(jax.random.PRNGKey(100), n)
+    kz = jax.random.split(jax.random.PRNGKey(200), n)
+    vf = np.asarray(jax.jit(jax.vmap(faithful))(kf))  # [n, 4, C]
+    vz = np.asarray(jax.jit(jax.vmap(fused))(kz))
+    se = vf.std(0).max() / np.sqrt(n)
+    assert np.abs(vf.mean(0) - vz.mean(0)).max() < max(6 * se, 0.5)
+    assert np.abs(vf.std(0) - vz.std(0)).max() < 0.5
+    # identical keys => identical draws: the two paths share ONE sampler
+    np.testing.assert_array_equal(
+        np.asarray(faithful(kf[0])), np.asarray(fused(kf[0])))
+
+
+def test_votes_fused_noisy_noiseless_limit_bit_exact():
+    head, _ = _random_head(13)
+    x = binarize.random_pm1(jax.random.PRNGKey(8), (16, 128))
+    np.testing.assert_array_equal(
+        np.asarray(ensemble.votes_fused_noisy(
+            head, x, key=jax.random.PRNGKey(0), noise=NOISELESS)),
+        np.asarray(ensemble.votes_fused(head, x)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Calibrated thresholds: knob_schedule round-trip through build_head
+# ---------------------------------------------------------------------------
+def test_calibrated_thresholds_roundtrip_build_head():
+    rng = np.random.default_rng(17)
+    layer = bnn.FoldedLayer(
+        weights_pm1=rng.choice([-1, 1], (10, 128)).astype(np.int8),
+        c=rng.integers(-30, 31, 10),
+    )
+    cfg = ensemble.EnsembleConfig(calibrated=True)
+    head = ensemble.build_head(layer, cfg)
+    sweep = np.asarray(cfg.thresholds, np.int64)
+    center = (128 + cfg.bias_cells) // 2
+    want = (center - sweep.max() // 2
+            + physics.achieved_sweep(len(sweep), int(sweep.max())))
+    assert head.thresholds.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(head.thresholds), want.astype(np.float32), rtol=1e-6)
+    # achieved values stay close to the ideal sweep (Table-I calibration)
+    ideal = ensemble.build_head(layer, ensemble.EnsembleConfig()).thresholds
+    assert np.abs(np.asarray(head.thresholds)
+                  - np.asarray(ideal, np.float32)).max() <= 3.0
+    # and the head is consumable by every vote path unchanged
+    x = binarize.random_pm1(jax.random.PRNGKey(3), (8, 128))
+    np.testing.assert_array_equal(
+        np.asarray(ensemble.votes_fused(head, x)),
+        np.asarray(ensemble.votes_faithful(head, x)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ensemble.votes_kernel(head, x)),
+        np.asarray(ensemble.votes_fused(head, x)),
+    )
+
+
+def test_vref_sensitivity_sign_and_magnitude():
+    from repro.core.device_model import default_params, hd_threshold
+
+    p = default_params()
+    dm = float(physics.vref_sensitivity(p, 0.95, 0.525, 1.1))
+    assert dm < 0  # raising V_ref always lowers the tolerance
+    # matches a central finite difference of the behavioural model
+    eps = 1e-4
+    fd = (float(hd_threshold(p, 0.95 + eps, 0.525, 1.1))
+          - float(hd_threshold(p, 0.95 - eps, 0.525, 1.1))) / (2 * eps)
+    np.testing.assert_allclose(dm, fd, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Slow tier: the full Monte-Carlo robustness sweep (opt-in)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_full_noise_robustness_sweep():
+    """Full-size benchmark sweep: fused-MC speedup >= 5x and the trained
+    LLN claim (silicon within ~1 point at 33 passes).  Opt-in via
+    --run-slow; the fast deterministic slice runs in scripts/smoke.sh."""
+    from benchmarks import noise_robustness
+
+    rows, record = noise_robustness.bench()
+    assert record["speedup"]["speedup"] >= 5.0, record["speedup"]
+    lln = noise_robustness.trained_lln()
+    assert lln["delta_points"] <= 1.5, lln

@@ -167,6 +167,87 @@ def test_fold_emits_dead_zone_free_constants():
         assert (np.abs(layer.c) <= cfg.bias_cells).all()
 
 
+@pytest.mark.parametrize("bank", sorted(BANK_NETS))
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_noisy_pipeline_noiseless_limit_bit_exact(bank, impl):
+    """sigma -> 0 limit: every silicon-mode entry point (votes(key=),
+    votes_mc, cum_votes) equals the PR-1 noiseless oracle bit-for-bit on
+    all three bank configurations."""
+    from repro.core.device_model import NOISELESS
+
+    sizes, bias = BANK_NETS[bank], BANK_BIAS[bank]
+    folded = _random_folded(sizes, seed=sum(map(ord, bank)), bias_cells=bias)
+    ecfg = ensemble.EnsembleConfig(bias_cells=bias)
+    pipe = pipeline.compile_pipeline(
+        folded, ecfg, impl=impl, bq=16, noise=NOISELESS
+    )
+    x = jnp.asarray(
+        np.random.default_rng(8).choice([-1.0, 1.0], (19, sizes[0])),
+        jnp.float32,
+    )
+    key = jax.random.PRNGKey(42)
+    want = np.asarray(_oracle_votes(folded, pipe.head, x))
+    np.testing.assert_array_equal(np.asarray(pipe.votes(x, key)), want)
+    mc = np.asarray(pipe.votes_mc(x, key, 3))
+    np.testing.assert_array_equal(mc, np.broadcast_to(want, mc.shape))
+    cum = np.asarray(pipe.cum_votes(x, key))
+    np.testing.assert_array_equal(cum[-1], want)
+    np.testing.assert_array_equal(
+        cum,
+        np.asarray(ensemble.sweep_from_votes(jnp.asarray(want),
+                                             cum.shape[0])),
+    )
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_noisy_pipeline_impls_agree_under_silicon(impl):
+    """Same key => pallas and xla noisy twins produce identical votes
+    (the sampled thresholds are computed outside the kernel), and a
+    silicon draw actually differs from the noiseless votes."""
+    from repro.core.device_model import SILICON
+
+    folded = _random_folded((784, 128, 10), seed=23, bias_cells=64)
+    ecfg = ensemble.EnsembleConfig()
+    pipe = pipeline.compile_pipeline(
+        folded, ecfg, impl=impl, bq=16, noise=SILICON
+    )
+    # batch == bucket so the in-program sample shape equals the logical
+    # batch (the draw-for-draw comparison below needs identical shapes)
+    x = jnp.asarray(
+        np.random.default_rng(9).choice([-1.0, 1.0], (64, 784)), jnp.float32
+    )
+    key = jax.random.PRNGKey(5)
+    got = np.asarray(pipe.votes(x, key))
+    # silicon noise perturbs (vs noiseless) ...
+    assert (got != np.asarray(pipe.votes(x))).any()
+    # ... but both impls sample identically
+    ref = pipeline.compile_pipeline(folded, ecfg, impl="xla", noise=SILICON)
+    np.testing.assert_array_equal(got, np.asarray(ref.votes(x, key)))
+    # and the noisy path is draw-for-draw equal to ensemble's fused twin
+    h = x
+    for layer in folded[:-1]:
+        y = h @ jnp.asarray(layer.weights_pm1.T, jnp.float32) + jnp.asarray(
+            layer.c, jnp.float32
+        )
+        h = jnp.where(y >= 0, 1.0, -1.0)
+    want = np.asarray(ensemble.votes_fused_noisy(
+        head=pipe.head, x_pm1=h, key=key, physics=pipe.physics))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pipeline_without_noise_rejects_key():
+    folded = _random_folded((128, 10), seed=31, bias_cells=64)
+    pipe = pipeline.compile_pipeline(folded, ensemble.EnsembleConfig(),
+                                     impl="xla")
+    x = jnp.asarray(
+        np.random.default_rng(11).choice([-1.0, 1.0], (4, 128)), jnp.float32
+    )
+    with pytest.raises(ValueError, match="noise="):
+        pipe.votes(x, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="noise="):
+        pipe.votes_mc(x, jax.random.PRNGKey(0), 2)
+
+
 def test_sweep_from_votes_matches_accuracy_sweep_cumsum():
     """The truncated-sweep recovery identity behind the fused Fig. 5 path."""
     folded = _random_folded((128, 10), seed=21, bias_cells=64)
