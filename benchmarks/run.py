@@ -9,6 +9,7 @@ Sections:
   roofline — the 40-cell dry-run roofline table (§Roofline source)
   e2e      — fused-pipeline vs layer-by-layer end-to-end throughput
   noise    — silicon-noise robustness curves + fused-MC vs faithful speedup
+  serve    — classification serving engine under closed/open-loop load
 
 JSON schema (picbnn-bench/v1): {"schema", "meta": {...}, "sections":
 {name: [row, ...]}} where each row is the section's CSV tuple as a list
@@ -34,7 +35,7 @@ def main(argv=None):
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: "
-                         "fig5,table2,kern,roofline,e2e,noise")
+                         "fig5,table2,kern,roofline,e2e,noise,serve")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (sections -> rows)")
     args = ap.parse_args(argv)
@@ -47,6 +48,7 @@ def main(argv=None):
         kernels_bench,
         noise_robustness,
         roofline_table,
+        serve_load,
         table2,
     )
 
@@ -69,6 +71,11 @@ def main(argv=None):
         sections["noise"] = _rows_jsonable(
             noise_robustness.main(fast=args.fast, write_json=False)
         )
+    if only is None or "serve" in only:
+        # dict rows — the committed BENCH_serve.json trajectory file is
+        # written solely by `python -m benchmarks.serve_load`
+        sections["serve"] = serve_load.main(fast=args.fast,
+                                            write_json=False)
     if only is None or "fig5" in only:
         sections["fig5"] = _rows_jsonable(accuracy.main(fast=args.fast))
     elapsed = time.time() - t0

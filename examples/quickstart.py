@@ -93,6 +93,24 @@ def main():
           f"(paper: 560K); {1.0/cost.energy_j/1e6:.0f}M inf/s/W "
           f"(paper: 703M)")
 
+    print("=== 7. serving: async micro-batched classification ===")
+    # both pipelines behind one submit() API; silicon requests carry a
+    # per-request PRNG key, so served draws are reproducible bit-for-bit
+    from repro.serve.picbnn import BatchingPolicy, PicBnnServer
+
+    srv = PicBnnServer(BatchingPolicy(max_batch=256, max_wait_us=500.0))
+    srv.register("mnist", pipe, layer_sizes=cfg.layer_sizes)
+    srv.register("mnist-si", pipe_si, layer_sizes=cfg.layer_sizes)
+    srv.warmup()  # precompile every batch bucket: no first-request spike
+    with srv:
+        handles = [srv.submit("mnist", vxb[i]) for i in range(512)]
+        h_si = srv.submit("mnist-si", vxb[0],
+                          key=jax.random.PRNGKey(7))
+        served = [h.wait() for h in handles]
+        print(f"  served pred[0]={served[0]} (direct: {int(pred[0])}), "
+              f"silicon pred[0]={h_si.wait()}")
+    print("  " + srv.stats().summary().replace("\n", "\n  "))
+
 
 if __name__ == "__main__":
     main()

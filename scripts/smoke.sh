@@ -11,6 +11,6 @@ OUT="${1:-results/smoke_bench.json}"
 mkdir -p "$(dirname "$OUT")"
 
 python -m pytest -q
-python -m benchmarks.run --fast --only kern,table2,noise --json "$OUT"
+python -m benchmarks.run --fast --only kern,table2,noise,serve --json "$OUT"
 
 echo "smoke OK -> $OUT"

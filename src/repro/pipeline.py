@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -67,12 +68,36 @@ from repro.core.physics import SearchPhysics
 from repro.kernels import fused_mlp
 
 
-def next_bucket(n: int, min_bucket: int = 64) -> int:
-    """Smallest power-of-two bucket >= n (floored at min_bucket)."""
+def next_bucket(n: int, min_bucket: int = 64,
+                max_bucket: Optional[int] = None) -> int:
+    """Smallest power-of-two bucket >= n (floored at min_bucket).
+
+    n == 0 is rejected (an empty batch has no bucket — dispatching it
+    would burn a full min_bucket of padded compute for zero results), as
+    is exceeding the explicit `max_bucket` cap: a serving loop sets the
+    cap to its max batch so the compiled-variant set is closed (warmup
+    covers every bucket) and an oversized dispatch fails loudly instead
+    of silently compiling a new program variant mid-traffic.
+    """
+    if n <= 0:
+        raise ValueError(f"batch size must be >= 1, got {n}")
     b = min_bucket
     while b < n:
         b *= 2
+    if max_bucket is not None and b > max_bucket:
+        raise ValueError(
+            f"batch {n} needs bucket {b} > max_bucket {max_bucket}; "
+            "split the batch or recompile with a larger cap"
+        )
     return b
+
+
+def bucket_grid(max_batch: int, min_bucket: int = 64) -> tuple[int, ...]:
+    """Every bucket a batch in 1..max_batch can land on (ascending)."""
+    out = [min_bucket]
+    while out[-1] < max_batch:
+        out.append(out[-1] * 2)
+    return tuple(out)
 
 
 def _head_hd_xla(x_packed, layer_ws, layer_cs, layer_n_bits, head_rows,
@@ -132,21 +157,106 @@ class CompiledPipeline:
     _votes_noisy_packed: Optional[Callable] = None  # (x, key) -> [Bp, C]
     _votes_mc_packed: Optional[Callable] = None  # (x, key, S) -> [S, Bp, C]
     _cum_votes_packed: Optional[Callable] = None  # (x, key) -> [P, Bp, C]
+    _votes_each_packed: Optional[Callable] = None  # (x, keys[B,2]) -> [Bp, C]
+    _votes_mc_each_packed: Optional[Callable] = None  # (x, keys, S)
+    _votes_mc_each_sum_packed: Optional[Callable] = None  # -> [Bp, C]
+    _pack_fn: Optional[Callable] = None  # jitted ±1 [B, n_in] -> packed
+    max_bucket: Optional[int] = None  # serving cap on the bucket grid
 
     def _pack_input(self, x_pm1: jax.Array) -> jax.Array:
-        x_pm1 = jnp.asarray(x_pm1)
-        if self.head_only:
-            from repro.core.cam import query_with_bias
-
-            return query_with_bias(x_pm1, self.head.bias_cells)
-        return binarize.pack_pm1(x_pm1)
+        # one jitted dispatch: the eager op-by-op pack costs ~5x the whole
+        # fused vote program in host dispatch overhead (serving hot path)
+        return self._pack_fn(jnp.asarray(x_pm1))
 
     def _bucketed(self, x_packed: jax.Array):
         b = x_packed.shape[0]
-        bp = next_bucket(b, self.min_bucket)
+        bp = next_bucket(b, self.min_bucket, self.max_bucket)
         if bp != b:
             x_packed = jnp.pad(x_packed, ((0, bp - b), (0, 0)))
         return x_packed, b
+
+    def buckets_for(self, max_batch: int) -> tuple[int, ...]:
+        """The bucket grid batches 1..max_batch dispatch into."""
+        return bucket_grid(max_batch, self.min_bucket)
+
+    #: every warmable entry point; "votes" is the noiseless path, the
+    #: rest need a silicon-mode pipeline ("votes_mc*" also mc_samples)
+    WARMUP_ENTRIES = ("votes", "votes_noisy", "votes_each", "votes_mc",
+                      "votes_mc_each", "votes_mc_each_sum")
+
+    def warmup(self, max_batch: int, *, key: Optional[jax.Array] = None,
+               mc_samples: Optional[int] = None, device=None,
+               entries: Optional[Sequence[str]] = None) -> dict[int, float]:
+        """Precompile every bucket a batch <= max_batch can land on.
+
+        Runs one dummy batch per bucket through the selected compiled
+        entry points and blocks until ready, so first-request compile
+        latency never shows up in served percentiles.
+
+        entries : subset of WARMUP_ENTRIES; default warms everything the
+            pipeline supports (noiseless votes; plus votes(key=) /
+            votes_each, and the votes_mc* family when `mc_samples` is
+            given, on a silicon-mode pipeline).  A serving loop passes
+            exactly its dispatch path — each entry is a separate XLA
+            compile per bucket, and startup time is entries x buckets x
+            devices.
+        device  : commits the dummy operands — a device for round-robin
+            fan-out, or a `jax.sharding.Sharding` for SPMD fan-out (jit
+            caches key on input sharding, so warming with a different
+            placement than dispatch would never hit).  Scalar keys are
+            replicated when a sharding is given (a [2] key cannot take a
+            batch-axis shard).
+
+        Returns {bucket: seconds} — dominated by compile time on first
+        call, ~free when already cached.
+        """
+        if entries is None:
+            entries = ("votes",) if self.physics is None else (
+                self.WARMUP_ENTRIES if mc_samples
+                else ("votes", "votes_noisy", "votes_each")
+            )
+        unknown = set(entries) - set(self.WARMUP_ENTRIES)
+        if unknown:
+            raise ValueError(f"unknown warmup entries {sorted(unknown)}")
+        if any(e != "votes" for e in entries):
+            self._require_physics("warmup of silicon entries")
+        if any(e.startswith("votes_mc") for e in entries) and not mc_samples:
+            raise ValueError("votes_mc* warmup entries need mc_samples=")
+
+        replicated = None
+        if isinstance(device, jax.sharding.NamedSharding):
+            from jax.sharding import PartitionSpec
+
+            replicated = jax.sharding.NamedSharding(device.mesh,
+                                                    PartitionSpec())
+        times: dict[int, float] = {}
+        for b in self.buckets_for(max_batch):
+            x = jnp.ones((b, self.n_in), jnp.float32)
+            k = key if key is not None else jax.random.PRNGKey(0)
+            keys = jax.random.split(k, b)
+            if device is not None:
+                x = jax.device_put(x, device)
+                k = jax.device_put(k, replicated or device)
+                keys = jax.device_put(keys, device)  # batch-sharded like x
+            t0 = time.perf_counter()
+            if "votes" in entries:
+                jax.block_until_ready(self.votes(x))
+            if "votes_noisy" in entries:
+                jax.block_until_ready(self.votes(x, k))
+            if "votes_each" in entries:
+                jax.block_until_ready(self.votes_each(x, keys))
+            if "votes_mc" in entries:
+                jax.block_until_ready(self.votes_mc(x, k, mc_samples))
+            if "votes_mc_each" in entries:
+                jax.block_until_ready(
+                    self.votes_mc_each(x, keys, mc_samples)
+                )
+            if "votes_mc_each_sum" in entries:
+                jax.block_until_ready(
+                    self.votes_mc_each_sum(x, keys, mc_samples)
+                )
+            times[b] = time.perf_counter() - t0
+        return times
 
     def _require_physics(self, what: str) -> SearchPhysics:
         if self.physics is None:
@@ -165,14 +275,20 @@ class CompiledPipeline:
         """
         return self.votes_packed(self._pack_input(x_pm1), key)
 
+    @staticmethod
+    def _trim(out: jax.Array, b: int) -> jax.Array:
+        # slicing is an eager XLA op per call — skip it when the batch
+        # already fills its bucket (the serving hot path by construction)
+        return out if out.shape[0] == b else out[:b]
+
     def votes_packed(self, x_packed: jax.Array,
                      key: Optional[jax.Array] = None) -> jax.Array:
         """Vote counts for an already-packed input batch [B, Kw0]."""
         x_packed, b = self._bucketed(x_packed)
         if key is None:
-            return self._votes_packed(x_packed)[:b]
+            return self._trim(self._votes_packed(x_packed), b)
         self._require_physics("votes(key=...)")
-        return self._votes_noisy_packed(x_packed, key)[:b]
+        return self._trim(self._votes_noisy_packed(x_packed, key), b)
 
     def votes_mc(self, x_pm1: jax.Array, key: jax.Array,
                  n_samples: int) -> jax.Array:
@@ -186,7 +302,75 @@ class CompiledPipeline:
         """
         self._require_physics("votes_mc")
         x_packed, b = self._bucketed(self._pack_input(x_pm1))
-        return self._votes_mc_packed(x_packed, key, int(n_samples))[:, :b]
+        out = self._votes_mc_packed(x_packed, key, int(n_samples))
+        return out if out.shape[1] == b else out[:, :b]
+
+    def _each_keys(self, keys, b: int, bp: int) -> jax.Array:
+        keys = jnp.asarray(keys)
+        if keys.ndim != 2 or keys.shape[0] != b:
+            raise ValueError(
+                f"keys must be [B, key_width] raw uint32 PRNG keys with "
+                f"B == batch ({b}), got shape {tuple(keys.shape)} — stack "
+                "jax.random.PRNGKey / jax.random.split outputs"
+            )
+        if bp != b:  # pad rows get (valid) zero keys; results are sliced
+            keys = jnp.pad(keys, ((0, bp - b), (0, 0)))
+        return keys
+
+    def votes_each(self, x_pm1: jax.Array, keys: jax.Array) -> jax.Array:
+        """Per-REQUEST silicon realizations: keys [B, 2] -> [B, C] int32.
+
+        Row i's votes are one noise draw from keys[i] with a per-request
+        (`batch_shape=()`) sample — unlike `votes(x, key)`, whose one
+        batch-shaped draw makes each row's realization depend on its
+        position and on the bucket padding.  `votes_each` is therefore
+        invariant to batch composition: serving may coalesce requests
+        into arbitrary micro-batches and still return bit-for-bit the
+        votes a direct single-request call produces (the serving-engine
+        determinism contract; see serve/picbnn.py).  In the NOISELESS
+        limit it equals `votes(x)` exactly.
+        """
+        self._require_physics("votes_each")
+        x_packed, b = self._bucketed(self._pack_input(x_pm1))
+        keys = self._each_keys(keys, b, x_packed.shape[0])
+        return self._trim(self._votes_each_packed(x_packed, keys), b)
+
+    def votes_mc_each(self, x_pm1: jax.Array, keys: jax.Array,
+                      n_samples: int) -> jax.Array:
+        """Per-request Monte-Carlo votes: [n_samples, B, C] int32.
+
+        `votes_mc` with per-request PRNG keys: request i's sample s is
+        drawn from split(keys[i], n_samples)[s] with a per-request
+        (`batch_shape=()`) draw, so — like `votes_each`, and unlike
+        `votes_mc`'s one shared batch-shaped draw — results are invariant
+        to how requests are batched.  The Hamming distances are still
+        computed ONCE for the whole batch across all samples.
+        Identity: votes_mc_each(x, keys, S)[s, i] ==
+        votes_each(x[i:i+1], split(keys[i], S)[s:s+1])[0] (tested).
+        """
+        self._require_physics("votes_mc_each")
+        x_packed, b = self._bucketed(self._pack_input(x_pm1))
+        keys = self._each_keys(keys, b, x_packed.shape[0])
+        out = self._votes_mc_each_packed(x_packed, keys, int(n_samples))
+        return out if out.shape[1] == b else out[:, :b]
+
+    def votes_mc_each_sum(self, x_pm1: jax.Array, keys: jax.Array,
+                          n_samples: int) -> jax.Array:
+        """votes_mc_each summed over samples, [B, C] int32 — the MC
+        serving aggregate, with the reduction fused into the jitted
+        program (an eager .sum(0) per dispatch would compile mid-traffic
+        and cost a host dispatch on the serving hot path)."""
+        self._require_physics("votes_mc_each_sum")
+        x_packed, b = self._bucketed(self._pack_input(x_pm1))
+        keys = self._each_keys(keys, b, x_packed.shape[0])
+        return self._trim(
+            self._votes_mc_each_sum_packed(x_packed, keys, int(n_samples)),
+            b,
+        )
+
+    def predict_each(self, x_pm1: jax.Array, keys: jax.Array) -> jax.Array:
+        """Per-request-key Algorithm 1 prediction (argmax of votes_each)."""
+        return jnp.argmax(self.votes_each(x_pm1, keys), axis=-1)
 
     def cum_votes(self, x_pm1: jax.Array,
                   key: Optional[jax.Array] = None) -> jax.Array:
@@ -209,7 +393,8 @@ class CompiledPipeline:
                     "explicit key (each call is one silicon realization)"
                 )
             key = jax.random.PRNGKey(0)  # ignored by the NOISELESS sampler
-        return self._cum_votes_packed(x_packed, key)[:, :b]
+        out = self._cum_votes_packed(x_packed, key)
+        return out if out.shape[1] == b else out[:, :b]
 
     def predict(self, x_pm1: jax.Array,
                 key: Optional[jax.Array] = None) -> jax.Array:
@@ -229,9 +414,11 @@ def compile_pipeline(
     bq: int = 256,
     chunk: int = 4,
     min_bucket: int = 64,
+    max_bucket: int | None = None,
     interpret: bool | None = None,
     noise: NoiseModel | None = None,
     params=None,
+    donate: bool = False,
 ) -> CompiledPipeline:
     """Compile a folded BNN + ensemble head into a fused batch classifier.
 
@@ -241,11 +428,23 @@ def compile_pipeline(
               the Pallas kernel only *executes* off-TPU in interpret mode,
               which is for semantics tests, not speed).
     noise   : optional NoiseModel — compiles the silicon-mode twins
-              (votes(key=), votes_mc, cum_votes) with a SearchPhysics
-              bundle built from the head's threshold schedule; `params`
-              optionally overrides the AnalogParams.  noise=None keeps
-              the pipeline noiseless-only (no knob-schedule work at
-              compile time).
+              (votes(key=), votes_mc, cum_votes, and the per-request-key
+              votes_each / votes_mc_each serving entries) with a
+              SearchPhysics bundle built from the head's threshold
+              schedule; `params` optionally overrides the AnalogParams.
+              noise=None keeps the pipeline noiseless-only (no
+              knob-schedule work at compile time).
+    max_bucket : optional cap on the batch-bucket grid (see next_bucket);
+              serving loops set it to their max batch so warmup() closes
+              the compiled-variant set.
+    donate  : donate the packed input buffer to the jitted XLA-twin
+              entry points (donate_argnums) — the packing step produces
+              a fresh buffer per call, so a serving loop can hand it to
+              the program and save an allocation on TPU/GPU.  No effect
+              on results; backends that can't reuse the buffer (CPU)
+              just ignore the donation.  Off by default because
+              `votes_packed` is public API and donation invalidates the
+              caller's array.
     """
     ens_cfg = ens_cfg or EnsembleConfig()
     if len(folded) < 1:
@@ -261,6 +460,15 @@ def compile_pipeline(
     head = build_head(out_layer, ens_cfg)
     n_classes = head.n_classes
 
+    if hidden:
+        pack_fn = jax.jit(binarize.pack_pm1)
+    else:
+        from repro.core.cam import query_with_bias
+
+        pack_fn = jax.jit(
+            functools.partial(query_with_bias, bias_cells=head.bias_cells)
+        )
+
     layer_ws = tuple(
         binarize.pack_bits(jnp.asarray((l.weights_pm1 > 0).astype(np.uint8)))
         for l in hidden
@@ -273,6 +481,10 @@ def compile_pipeline(
     phys = None
     if noise is not None:
         phys = SearchPhysics.for_head(head, noise, params)
+
+    # donation-friendly entry points: the packed input is the only
+    # per-call buffer worth donating (weights live in the closure)
+    donate_kw = {"donate_argnums": (0,)} if donate else {}
 
     # chunk-padded operands for the XLA-twin math (also backs the
     # Monte-Carlo / cumulative paths of a pallas-impl pipeline)
@@ -298,7 +510,7 @@ def compile_pipeline(
                 interpret=interpret,
             )
 
-        @jax.jit
+        @functools.partial(jax.jit, **donate_kw)
         def votes_noisy_packed_fn(x_packed, key):
             t = phys.sample(
                 key, batch_shape=(x_packed.shape[0],), n_rows=n_classes
@@ -311,7 +523,7 @@ def compile_pipeline(
                 thr_samples=jnp.moveaxis(t, 0, -1),  # [B, C, P] operand
             )
     else:
-        @jax.jit
+        @functools.partial(jax.jit, **donate_kw)
         def votes_packed_fn(x_packed):
             kw0 = (ws[0] if ws else hr).shape[1]
             if x_packed.shape[1] < kw0:
@@ -323,7 +535,7 @@ def compile_pipeline(
                 head.bias_cells,
             )
 
-        @jax.jit
+        @functools.partial(jax.jit, **donate_kw)
         def votes_noisy_packed_fn(x_packed, key):
             hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C]
             t = phys.sample(
@@ -332,8 +544,11 @@ def compile_pipeline(
             return (hd[None] <= t).astype(jnp.int32).sum(0)
 
     votes_mc_packed_fn = cum_votes_packed_fn = None
+    votes_each_packed_fn = votes_mc_each_packed_fn = None
+    votes_mc_each_sum_packed_fn = None
     if phys is not None:
-        @functools.partial(jax.jit, static_argnames=("n_samples",))
+        @functools.partial(jax.jit, static_argnames=("n_samples",),
+                           **donate_kw)
         def votes_mc_packed_fn(x_packed, key, n_samples: int):
             hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C] — ONCE
 
@@ -343,11 +558,50 @@ def compile_pipeline(
 
             return jax.vmap(one)(jax.random.split(key, n_samples))
 
-        @jax.jit
+        @functools.partial(jax.jit, **donate_kw)
         def cum_votes_packed_fn(x_packed, key):
             hd = _hd_xla(x_packed).astype(jnp.float32)
             t = phys.sample(key, (hd.shape[0],), n_classes)  # [P, B, C]
             return jnp.cumsum((hd[None] <= t).astype(jnp.int32), axis=0)
+
+        # per-request-key serving entries: one HD pass for the batch,
+        # then a vmapped per-row draw with batch_shape=() — each row's
+        # realization depends only on (x_i, keys_i), never on batch
+        # composition or bucket padding (the serve determinism contract)
+        def _votes_one(hd_i, k):
+            t = phys.sample(k, (), n_classes)  # [P, C]
+            return (hd_i[None] <= t).astype(jnp.int32).sum(0)
+
+        @functools.partial(jax.jit, **donate_kw)
+        def votes_each_packed_fn(x_packed, keys):
+            hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C]
+            return jax.vmap(_votes_one)(hd, keys)
+
+        @functools.partial(jax.jit, static_argnames=("n_samples",),
+                           **donate_kw)
+        def votes_mc_each_packed_fn(x_packed, keys, n_samples: int):
+            hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C] — ONCE
+
+            def per_req(hd_i, k):
+                return jax.vmap(lambda ks: _votes_one(hd_i, ks))(
+                    jax.random.split(k, n_samples)
+                )  # [S, C]
+
+            return jnp.moveaxis(
+                jax.vmap(per_req)(hd, keys), 1, 0
+            )  # [S, B, C] (votes_mc layout)
+
+        @functools.partial(jax.jit, static_argnames=("n_samples",),
+                           **donate_kw)
+        def votes_mc_each_sum_packed_fn(x_packed, keys, n_samples: int):
+            hd = _hd_xla(x_packed).astype(jnp.float32)
+
+            def per_req(hd_i, k):
+                return jax.vmap(lambda ks: _votes_one(hd_i, ks))(
+                    jax.random.split(k, n_samples)
+                ).sum(0)  # [C] — reduction fused into the program
+
+            return jax.vmap(per_req)(hd, keys)  # [B, C]
 
     return CompiledPipeline(
         head=head,
@@ -362,4 +616,9 @@ def compile_pipeline(
         else None,
         _votes_mc_packed=votes_mc_packed_fn,
         _cum_votes_packed=cum_votes_packed_fn,
+        _votes_each_packed=votes_each_packed_fn,
+        _votes_mc_each_packed=votes_mc_each_packed_fn,
+        _votes_mc_each_sum_packed=votes_mc_each_sum_packed_fn,
+        _pack_fn=pack_fn,
+        max_bucket=max_bucket,
     )

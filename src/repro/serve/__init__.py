@@ -1,5 +1,13 @@
-"""Serving substrate: prefill/decode steps and the batched engine."""
+"""Serving substrate: LM prefill/decode engine + the PiC-BNN
+classification micro-batching server (serve/picbnn.py)."""
 
+from repro.serve.scheduler import (  # noqa: F401
+    BatchingPolicy,
+    LatencySummary,
+    MicroBatcher,
+    QueueFullError,
+    latency_summary,
+)
 from repro.serve.steps import (  # noqa: F401
     decode_step,
     greedy_sample,
@@ -8,3 +16,15 @@ from repro.serve.steps import (  # noqa: F401
     prefill_step,
     temperature_sample,
 )
+
+
+def __getattr__(name):
+    # PicBnnServer and friends import jax-heavy pipeline machinery;
+    # resolve lazily so `from repro.serve import BatchingPolicy` stays
+    # cheap for the LM path.
+    if name in ("PicBnnServer", "ClassifyResult", "GroupHandle",
+                "ServerStats", "ModelStats"):
+        from repro.serve import picbnn
+
+        return getattr(picbnn, name)
+    raise AttributeError(name)

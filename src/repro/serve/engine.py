@@ -32,14 +32,33 @@ class Request:
     uid: int
     prompt: np.ndarray  # [S] int32 token ids
     max_new_tokens: int = 32
+    t_submit: Optional[float] = None  # stamped at generate() if unset
 
 
 @dataclasses.dataclass
 class Result:
+    """One generation + per-request timing.
+
+    queue_ms / service_ms / latency_ms are PER-REQUEST and share the
+    serving-metrics vocabulary of the classification engine
+    (serve/scheduler.py): queue = submit -> this request's batch started;
+    service = batch start -> this request's LAST token (EOS-finished
+    requests stop accruing service time while their batch keeps
+    decoding).  prefill_ms / decode_ms remain as BATCH-level phase
+    timings (every Result in a batch reports the same values — they
+    describe the batch, not the request).
+    """
+
     uid: int
     tokens: list
-    prefill_ms: float
-    decode_ms: float
+    prefill_ms: float  # batch-level: the shared prefill step
+    decode_ms: float  # batch-level: the shared decode loop
+    queue_ms: float = 0.0
+    service_ms: float = 0.0
+
+    @property
+    def latency_ms(self) -> float:
+        return self.queue_ms + self.service_ms
 
 
 @dataclasses.dataclass
@@ -76,6 +95,10 @@ class Engine:
 
     def generate(self, requests: Iterable[Request]) -> list[Result]:
         reqs = list(requests)
+        now = time.perf_counter()
+        for r in reqs:  # batch-mode callers get queue time measured from
+            if r.t_submit is None:  # entry; streaming callers pre-stamp
+                r.t_submit = now
         out: list[Result] = []
         for i in range(0, len(reqs), self.ecfg.max_batch):
             out.extend(self._run_batch(reqs[i : i + self.ecfg.max_batch]))
@@ -85,20 +108,24 @@ class Engine:
         prompts = self._pad_prompts(reqs)
         b, s = prompts.shape
         max_new = max(r.max_new_tokens for r in reqs)
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = self._prefill(
             self.params, {"tokens": prompts}, max_len=s + max_new
         )
         logits.block_until_ready()
-        prefill_ms = (time.time() - t0) * 1e3
+        t_prefill_done = time.perf_counter()
+        prefill_ms = (t_prefill_done - t0) * 1e3
 
         tokens = np.argmax(np.asarray(logits), -1).astype(np.int32)
         generated = [[int(t)] for t in tokens]
         done = np.zeros(b, bool)
+        # per-request completion stamps: a request's service time ends at
+        # ITS last token, not at the end of the batch's decode loop
+        t_finish = np.full(b, time.perf_counter())
         for i, r in enumerate(reqs):
             if tokens[i] == self.ecfg.eos_id or r.max_new_tokens <= 1:
                 done[i] = True
-        t1 = time.time()
+        t1 = time.perf_counter()
         pos = s
         cur = tokens[:, None]
         for _ in range(max_new - 1 if not done.all() else 0):
@@ -106,6 +133,7 @@ class Engine:
                 self.params, cache, jnp.asarray(cur), jnp.int32(pos)
             )
             nxt = np.argmax(np.asarray(lg), -1).astype(np.int32)
+            t_step = time.perf_counter()
             for i in range(b):
                 if not done[i]:
                     generated[i].append(int(nxt[i]))
@@ -113,13 +141,18 @@ class Engine:
                         done[i] = True
                     if len(generated[i]) >= reqs[i].max_new_tokens:
                         done[i] = True
+                    t_finish[i] = t_step
             pos += 1
             cur = nxt[:, None]
             if done.all():
                 break
-        decode_ms = (time.time() - t1) * 1e3
+        decode_ms = (time.perf_counter() - t1) * 1e3
         return [
-            Result(uid=r.uid, tokens=generated[i], prefill_ms=prefill_ms,
-                   decode_ms=decode_ms)
+            Result(
+                uid=r.uid, tokens=generated[i], prefill_ms=prefill_ms,
+                decode_ms=decode_ms,
+                queue_ms=(t0 - r.t_submit) * 1e3,
+                service_ms=(t_finish[i] - t0) * 1e3,
+            )
             for i, r in enumerate(reqs)
         ]

@@ -201,6 +201,37 @@ SERVE_SEQCACHE_RULES = AxisRules(
     rules={**SERVE_RULES.rules, "kv_seq": "model"},
 )
 
+# PiC-BNN classification serving (serve/picbnn.py, fanout="spmd"): pure
+# data parallelism over one local 'data' axis — the micro-batch splits
+# across devices, everything else (packed weights, folded constants,
+# thresholds — all jit-closure constants of the compiled pipeline)
+# replicates.  The round-robin fan-out needs no rules at all: each batch
+# runs whole on one device.
+PICBNN_SERVE_RULES = AxisRules(
+    name="picbnn_serve",
+    rules={"batch": "data", "features": None, "classes": None},
+)
+
+
+def serve_mesh(devices) -> Mesh:
+    """A 1-axis ('data') mesh over the serving devices (local fan-out)."""
+    import numpy as np
+
+    return Mesh(np.asarray(list(devices)), ("data",))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement (every device holds the full array) —
+    the serve-time contract for the folded weights."""
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh,
+                   rules: AxisRules = PICBNN_SERVE_RULES) -> NamedSharding:
+    """Leading-axis data-parallel placement for a served micro-batch
+    (trailing dims replicated), derived through the logical rules."""
+    return NamedSharding(mesh, rules.spec("batch"))
+
 
 def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
     """Drop partitioned dims that don't divide evenly.
