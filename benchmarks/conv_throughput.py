@@ -1,0 +1,242 @@
+"""End-to-end binary CNN benchmark: fused packed-domain conv pipeline vs
+the layer-by-layer unpacked baseline, plus accuracy-vs-passes curves.
+
+The conv analogue of `benchmarks/e2e_throughput.py`, covering the
+paper's *end-to-end* binarization claim on the workload family the
+related work targets (XNORBIN / ChewBaccaNN binary-CNN datapaths):
+
+  baseline — the pre-pipeline deployed path: per conv layer, channel-
+             pack the ±1 float feature map (shift-broadcast pack),
+             per-tap XOR-popcount accumulation, +C, sign back to ±1
+             floats — activations round-trip through the unpacked
+             domain between every layer, ops dispatch eagerly — then
+             the flattened FC stage and fused head vote.
+  fused    — the conv pipeline (`configs.paper_cnn.build_cnn_pipeline`):
+             one compiled program from raw [0,1] pixels (thermometer
+             input encoding inside) to int32 votes, activations packed
+             uint32 end to end.
+
+Both paths are verified vote-identical before timing on BOTH input
+sizes (28x28 MNIST-shape and 64x64 HG-shape — the acceptance bar).
+The accuracy section trains the small binary CNNs on the synthetic
+datasets and reports Algorithm-1 accuracy as a function of the pass
+count (the Fig.-5 sweep, conv edition) via the noiseless truncated-
+sweep identity `ensemble.sweep_from_votes`.
+
+Results are emitted as `BENCH_conv.json` at the repo root (schema
+picbnn-bench-conv/v1) so the perf trajectory is machine-readable
+across PRs.
+
+Run:  PYTHONPATH=src python -m benchmarks.conv_throughput [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import HG_CNN, MNIST_CNN, build_cnn_pipeline
+from repro.core import binarize, convnet, ensemble
+from repro.core.convnet import CNNConfig
+from repro.data.synthetic import HG_LIKE, MNIST_LIKE, make_dataset
+from repro.kernels import fused_conv
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def make_baseline(cfg: CNNConfig, folded, head):
+    """The pre-pipeline layer-by-layer unpacked deployed CNN (eager).
+
+    Every conv layer crosses the packed/unpacked boundary twice (float
+    sign activations -> shift-broadcast channel pack -> packed per-tap
+    XNOR-popcount -> float sign), exactly the round trips the fused
+    pipeline removes; the FC stage mirrors e2e_throughput's baseline.
+    """
+    conv_layers = [l for l in folded if isinstance(l, convnet.FoldedConvLayer)]
+    fc_layers = [l for l in folded
+                 if not isinstance(l, convnet.FoldedConvLayer)]
+    metas = fused_conv.conv_metas_for(conv_layers, cfg.side)
+    conv_ws = [fused_conv.pack_conv_rows(l) for l in conv_layers]
+    conv_cs = [jnp.asarray(l.c, jnp.int32) for l in conv_layers]
+    fc_ws = [
+        binarize.pack_bits(jnp.asarray((l.weights_pm1 > 0).astype(np.uint8)))
+        for l in fc_layers[:-1]
+    ]
+    fc_cs = [jnp.asarray(l.c, jnp.int32) for l in fc_layers[:-1]]
+    fc_nb = [l.n_in for l in fc_layers[:-1]]
+
+    def baseline(x01):
+        h = cfg.encoding.encode_pm1(
+            jnp.asarray(x01).reshape(-1, cfg.side, cfg.side)
+        )  # ±1 float feature map [B, S, S, E]
+        for w, c, m in zip(conv_ws, conv_cs, metas):
+            # activations leave the binary domain every layer: pack the
+            # ±1 floats, search (shared tap geometry — the same helper
+            # the fused kernel uses), sign back to floats
+            xp = binarize.pack_bits_reference(binarize.to_bits(h))
+            hd = fused_conv.conv_hd_packed(xp, w, m)
+            y = (m.n_bits - 2 * hd) + c[None, None, None, :]
+            h = jnp.where(y >= 0, 1.0, -1.0)
+        h = h.reshape(h.shape[0], -1)  # NHWC flatten, ±1 floats
+        for w, c, nb in zip(fc_ws, fc_cs, fc_nb):
+            xp = binarize.pack_bits_reference(binarize.to_bits(h))
+            hd = binarize.hamming_packed(xp[:, None, :], w)
+            y = (nb - 2 * hd) + c[None, :]
+            h = jnp.where(y >= 0, 1.0, -1.0)
+        return ensemble.votes_fused(head, h)
+
+    return baseline
+
+
+def _time(fn, x, reps):
+    jax.block_until_ready(fn(x))  # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(x))
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_throughput(cfg: CNNConfig, name: str, batches, reps, seed=0):
+    """Bit-exactness gate + fused-vs-baseline timing for one config."""
+    folded = convnet.random_folded_cnn(cfg, seed=seed)
+    pipe = build_cnn_pipeline(cfg, folded, impl=None)
+    baseline = make_baseline(cfg, folded, pipe.head)
+    rng = np.random.default_rng(seed + 1)
+    rows = []
+    for b in batches:
+        x = rng.random((b, cfg.n_in)).astype(np.float32)
+        v_fused = np.asarray(pipe.votes(x))
+        v_base = np.asarray(baseline(x))
+        np.testing.assert_array_equal(v_fused, v_base)  # bit-exact gate
+        t_fused = _time(pipe.votes, x, reps)
+        t_base = _time(baseline, x, reps)
+        rows.append({
+            "model": name,
+            "batch": int(b),
+            "bit_exact": True,
+            "fused_s": t_fused,
+            "baseline_s": t_base,
+            "fused_inf_per_s": b / t_fused,
+            "baseline_inf_per_s": b / t_base,
+            "speedup": t_base / t_fused,
+        })
+    return rows
+
+
+def bench_accuracy(cfg: CNNConfig, name: str, spec, *, n_train, n_test,
+                   epochs, pass_points=(1, 5, 9, 17, 33), seed=0):
+    """Train the binary CNN on synthetic data; accuracy vs pass count."""
+    tx, ty, vx, vy = make_dataset(spec, n_train=n_train, n_test=n_test,
+                                  seed=seed)
+    params = convnet.train_cnn(jax.random.PRNGKey(seed), cfg, tx, ty,
+                               epochs=epochs)
+    sw = convnet.eval_cnn_accuracy(params, cfg, vx, vy)["top1"]
+    pipe = build_cnn_pipeline(cfg, convnet.fold_cnn(params, cfg))
+    votes = pipe.votes(jnp.asarray(vx))
+    n_passes = int(pipe.head.thresholds.shape[0])
+    # noiseless truncated-sweep identity: the whole Fig.-5-style curve
+    # from ONE fused pass (sweep_from_votes is noiseless-only)
+    cum = ensemble.sweep_from_votes(votes, n_passes)
+    acc = ensemble.accuracy_from_cumulative(cum, vy, topk=(1,))
+    curve = {int(p): acc[min(p, n_passes)]["top1"] for p in pass_points}
+    return {
+        "model": name,
+        "n_train": n_train,
+        "n_test": n_test,
+        "epochs": epochs,
+        "software_top1": sw,
+        "deployed_top1_by_passes": curve,
+        "silicon_equiv_inf_per_s":
+            convnet.cnn_inference_cost(cfg, n_passes).inferences_per_s,
+    }
+
+
+def main(fast: bool = False, json_path: str | None = None, reps: int = 10,
+         write_json: bool = True):
+    """write_json=False (benchmarks.run) returns rows without touching
+    BENCH_conv.json — the committed trajectory file is only (re)written
+    by running this module directly."""
+    reps = max(3, reps // 2) if fast else reps
+    batches = (64,) if fast else (64, 256)
+    print("# conv throughput: model,batch,impl,inf_per_s,sec_per_batch,"
+          "speedup")
+    thr_rows = []
+    # both input sizes run even in fast mode — the acceptance bar wants
+    # bit-exactness + speedup on >= 2 sizes (64x64 at batch 64 only)
+    sizes = [(MNIST_CNN, "cnn-mnist-28"), (HG_CNN, "cnn-hg-64")]
+    for cfg, name in sizes:
+        rows = bench_throughput(
+            cfg, name, batches if cfg.side <= 28 else batches[:1], reps
+        )
+        thr_rows += rows
+        for r in rows:
+            print(f"conv,{r['model']},{r['batch']},fused,"
+                  f"{r['fused_inf_per_s']:.0f},{r['fused_s']:.6f},"
+                  f"{r['speedup']:.2f}x")
+            print(f"conv,{r['model']},{r['batch']},baseline-unpacked,"
+                  f"{r['baseline_inf_per_s']:.0f},{r['baseline_s']:.6f},"
+                  f"1.00x")
+
+    print("# conv accuracy vs passes (synthetic data, trained binary CNN)")
+    acc_rows = [
+        bench_accuracy(
+            MNIST_CNN, "cnn-mnist-28", MNIST_LIKE,
+            n_train=800 if fast else 4000,
+            n_test=200 if fast else 800,
+            epochs=2 if fast else 6,
+        )
+    ]
+    if not fast:
+        acc_rows.append(bench_accuracy(
+            HG_CNN, "cnn-hg-64", HG_LIKE,
+            n_train=1500, n_test=300, epochs=4,
+        ))
+    for r in acc_rows:
+        curve = ",".join(f"p{p}={a:.3f}"
+                         for p, a in r["deployed_top1_by_passes"].items())
+        print(f"acc,{r['model']},software={r['software_top1']:.3f},{curve}")
+
+    record = {
+        "schema": "picbnn-bench-conv/v1",
+        "models": {
+            name: {
+                "side": cfg.side,
+                "encoding": [cfg.encoding.kind, cfg.encoding.width],
+                "conv": [[s.k, s.c_out, s.stride] for s in cfg.conv],
+                "hidden": list(cfg.hidden),
+                "n_classes": cfg.n_classes,
+                "flat_features": cfg.flat_features,
+            }
+            for cfg, name in ((MNIST_CNN, "cnn-mnist-28"),
+                              (HG_CNN, "cnn-hg-64"))
+        },
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "reps": reps,
+        "throughput": thr_rows,
+        "accuracy": acc_rows,
+        "min_speedup": min(r["speedup"] for r in thr_rows),
+        "max_speedup": max(r["speedup"] for r in thr_rows),
+    }
+    if write_json:
+        out = Path(json_path) if json_path else REPO_ROOT / "BENCH_conv.json"
+        out.write_text(json.dumps(record, indent=2) + "\n")
+        print(f"# wrote {out} (min speedup {record['min_speedup']:.2f}x)")
+    return {"throughput": thr_rows, "accuracy": acc_rows}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None, help="output path override")
+    ap.add_argument("--reps", type=int, default=10)
+    args = ap.parse_args()
+    main(fast=args.fast, json_path=args.json, reps=args.reps)

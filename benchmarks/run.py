@@ -8,6 +8,8 @@ Sections:
   kern     — Pallas kernel microbench + TPU memory-roofline derivations
   roofline — the 40-cell dry-run roofline table (§Roofline source)
   e2e      — fused-pipeline vs layer-by-layer end-to-end throughput
+  conv     — end-to-end binary CNN: fused conv pipeline vs unpacked
+             layer-by-layer + accuracy-vs-passes on 28x28/64x64
   noise    — silicon-noise robustness curves + fused-MC vs faithful speedup
   serve    — classification serving engine under closed/open-loop load
 
@@ -35,7 +37,7 @@ def main(argv=None):
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: "
-                         "fig5,table2,kern,roofline,e2e,noise,serve")
+                         "fig5,table2,kern,roofline,e2e,conv,noise,serve")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (sections -> rows)")
     args = ap.parse_args(argv)
@@ -44,6 +46,7 @@ def main(argv=None):
     t0 = time.time()
     from benchmarks import (
         accuracy,
+        conv_throughput,
         e2e_throughput,
         kernels_bench,
         noise_robustness,
@@ -65,6 +68,11 @@ def main(argv=None):
         sections["e2e"] = _rows_jsonable(
             e2e_throughput.main(fast=args.fast, write_json=False)
         )
+    if only is None or "conv" in only:
+        # dict rows — the committed BENCH_conv.json trajectory file is
+        # written solely by `python -m benchmarks.conv_throughput`
+        sections["conv"] = conv_throughput.main(fast=args.fast,
+                                                write_json=False)
     if only is None or "noise" in only:
         # rows only — the committed BENCH_noise.json trajectory file is
         # written solely by `python -m benchmarks.noise_robustness`

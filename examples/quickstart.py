@@ -111,6 +111,35 @@ def main():
               f"silicon pred[0]={h_si.wait()}")
     print("  " + srv.stats().summary().replace("\n", "\n  "))
 
+    print("=== 8. end-to-end-binary CNN workload ===")
+    # the input layer is binary too: raw [0,1] pixels pass through a
+    # thermometer encoding INSIDE the compiled program (the paper's
+    # end-to-end claim, conv edition — see DESIGN.md §10)
+    from repro.configs.paper_cnn import MNIST_CNN, build_cnn_pipeline
+    from repro.core import convnet
+
+    cnn_epochs = 2 if args.fast else 6
+    cnn_params = convnet.train_cnn(
+        jax.random.PRNGKey(1), MNIST_CNN, tx, ty, epochs=cnn_epochs
+    )
+    cnn_pipe = build_cnn_pipeline(MNIST_CNN, convnet.fold_cnn(cnn_params,
+                                                             MNIST_CNN))
+    acc_sw = convnet.eval_cnn_accuracy(cnn_params, MNIST_CNN, vx, vy)["top1"]
+    acc_cnn = float((cnn_pipe.predict(jnp.asarray(vx))
+                     == jnp.asarray(vy)).mean())
+    si = convnet.cnn_inference_cost(MNIST_CNN).inferences_per_s
+    print(f"  conv(3x3x32,s2) x2 -> FC128 -> 10-row CAM head, "
+          f"thermometer-8 input")
+    print(f"  software top1 {acc_sw:.4f} vs deployed Algorithm-1 "
+          f"{acc_cnn:.4f}; silicon equivalent {si/1e3:.1f}K inf/s")
+    cnn_srv = PicBnnServer(BatchingPolicy(max_batch=128, max_wait_us=500.0))
+    cnn_srv.register("cnn-mnist", cnn_pipe,
+                     silicon_cost=convnet.cnn_inference_cost(MNIST_CNN))
+    with cnn_srv:
+        h = cnn_srv.submit("cnn-mnist", vx[0])  # raw [0,1] pixels
+        print(f"  served CNN pred[0]={h.wait()} "
+              f"(direct: {int(cnn_pipe.predict(vx[:1])[0])})")
+
 
 if __name__ == "__main__":
     main()

@@ -11,6 +11,7 @@ OUT="${1:-results/smoke_bench.json}"
 mkdir -p "$(dirname "$OUT")"
 
 python -m pytest -q
-python -m benchmarks.run --fast --only kern,table2,noise,serve --json "$OUT"
+python scripts/check_docs.py
+python -m benchmarks.run --fast --only kern,table2,conv,noise,serve --json "$OUT"
 
 echo "smoke OK -> $OUT"

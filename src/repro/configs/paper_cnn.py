@@ -1,0 +1,78 @@
+"""End-to-end-binary CNN configs for the paper's two image tasks.
+
+The paper's headline property is *end-to-end* binarization: unlike
+typical BNNs that keep "the input layer of a convolutional neural
+network" in full precision, every layer here — input included — computes
+on bits.  These configs instantiate that claim as small binary CNNs over
+the same synthetic stand-in datasets the MLP workload uses
+(`data/synthetic.py`):
+
+  MNIST CNN (28x28, 10 classes):
+      thermometer-8 input -> 3x3x32 s2 conv -> 3x3x32 s2 conv
+      -> flatten 1152 -> FC 128 -> CAM head (10 rows, 33-pass vote)
+  HG CNN (64x64, 20 classes):
+      thermometer-4 input -> 3x3x32 s2 conv -> 3x3x32 s2 conv
+      -> flatten 7200 -> FC 128 -> CAM head (20 rows, 33-pass vote)
+
+Downsampling is stride-2 VALID convs (no pooling — pooling would need a
+majority unit outside the binary-matching machinery).  Conv channel
+counts are multiples of 32 so the conv->FC flatten is word-aligned
+(DESIGN.md §10); the head row (128 + 64 bias cells) lands on the macro's
+1024x128 logical bank configuration, same as the paper MLPs.
+
+`build_cnn_pipeline` is the one-call deployment path used by the
+benchmarks, the serving registry, and the tests.
+"""
+
+from __future__ import annotations
+
+from repro.core.binarize import InputEncoding
+from repro.core.convnet import CNNConfig, ConvSpec
+from repro.core.ensemble import EnsembleConfig, PAPER_THRESHOLDS
+
+MNIST_CNN = CNNConfig(
+    side=28,
+    encoding=InputEncoding("thermometer", 8),
+    conv=(ConvSpec(3, 32, 2), ConvSpec(3, 32, 2)),
+    hidden=(128,),
+    n_classes=10,
+    bias_cells=64,
+)
+
+HG_CNN = CNNConfig(
+    side=64,
+    encoding=InputEncoding("thermometer", 4),
+    conv=(ConvSpec(3, 32, 2), ConvSpec(3, 32, 2)),
+    hidden=(128,),
+    n_classes=20,
+    bias_cells=64,
+)
+
+CNN_ENSEMBLE = EnsembleConfig(
+    thresholds=PAPER_THRESHOLDS, bias_cells=64, mode="fused"
+)
+
+
+def build_cnn_pipeline(cfg: CNNConfig, folded, *, impl=None, bq=None,
+                       noise=None, **kw):
+    """Compile a folded CNN into the fused end-to-end pipeline.
+
+    Thin wrapper over `pipeline.compile_pipeline` that threads the
+    config's image geometry and binary input encoding (the conv-aware
+    bq default — 64, DESIGN.md §10 — comes from compile_pipeline
+    itself).  `folded` is `convnet.fold_cnn` (trained) or
+    `convnet.random_folded_cnn` (weight-agnostic benchmarks/tests)
+    output.
+    """
+    from repro import pipeline
+
+    return pipeline.compile_pipeline(
+        folded,
+        EnsembleConfig(bias_cells=cfg.bias_cells),
+        impl=impl,
+        bq=bq,
+        image_side=cfg.side,
+        image_encoding=cfg.encoding,
+        noise=noise,
+        **kw,
+    )

@@ -11,6 +11,7 @@ the last axis; `valid_len` tracks the logical (unpadded) bit length.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -52,6 +53,7 @@ def from_bits(bits, dtype=jnp.float32):
 
 
 def packed_width(n_bits: int) -> int:
+    """uint32 words needed for n_bits packed bits (ceil division)."""
     return -(-n_bits // WORD)
 
 
@@ -132,6 +134,7 @@ def dot_from_hd(hd, n_bits):
 
 
 def hd_from_dot(dot, n_bits):
+    """Inverse of `dot_from_hd`: Hamming distance from the ±1 dot."""
     return (n_bits - dot) // 2
 
 
@@ -156,7 +159,117 @@ def binary_matvec_packed(w_packed, x_packed, n_bits: int):
     return dot_from_hd(hd, n_bits).reshape(*lead, w_packed.shape[0])
 
 
+# ---------------------------------------------------------------------------
+# Binary input layer: [0, 1] intensity -> multi-bit binary codes
+# ---------------------------------------------------------------------------
+# The paper's end-to-end claim binarizes the INPUT layer too (typical BNNs
+# keep it full precision).  A single sign threshold throws away all
+# magnitude information; these encodings expand each [0, 1] intensity into
+# `width` binary channels so the first (binary) conv layer sees a graded
+# input while the whole network still computes only on bits.
+
+
+def thermometer_bits(x01, width: int):
+    """[0,1] intensities -> thermometer code, [..., width] {0,1} uint8.
+
+    Bit t fires iff x >= (t+1)/(width+1): the code is monotone (all ones
+    below the fill level, zeros above), so the XNOR-popcount dot of two
+    codes is monotone in |x - y| — Hamming distance between codes equals
+    the quantized intensity gap, which is exactly the semantics the
+    Hamming-tolerant CAM search expects.  width=1 reduces to the plain
+    x >= 0.5 sign binarization (`data.synthetic.binarize_images`); an
+    all-zero image encodes to all-zero bits (logical -1).
+    """
+    if width < 1:
+        raise ValueError(f"thermometer width must be >= 1, got {width}")
+    x = jnp.asarray(x01)
+    thr = (jnp.arange(width, dtype=jnp.float32) + 1.0) / (width + 1.0)
+    return (x[..., None] >= thr).astype(jnp.uint8)
+
+
+def thermometer_decode(bits):
+    """Thermometer code -> intensity estimate in [0,1] (level midpoint).
+
+    Inverse of `thermometer_bits` up to quantization: with fill level
+    k = sum(bits) of width T, x is known to lie in [k/(T+1), (k+1)/(T+1))
+    (clamped at the top); the midpoint (k + 0.5)/(T + 1) minimizes the
+    worst-case round-trip error of 0.5/(T+1).
+    """
+    bits = jnp.asarray(bits)
+    width = bits.shape[-1]
+    k = bits.astype(jnp.int32).sum(-1).astype(jnp.float32)
+    return (k + 0.5) / (width + 1.0)
+
+
+def bitplane_bits(x01, width: int):
+    """[0,1] intensities -> binary expansion, [..., width] {0,1} uint8.
+
+    Quantizes to round(x * (2^width - 1)) and emits the bit planes
+    LSB-first (bit t has weight 2^t).  Denser than thermometer (width
+    bits give 2^width levels vs width+1) but NOT Hamming-faithful: an
+    XNOR-popcount dot weighs the MSB plane the same as the LSB plane, so
+    HD between codes is not monotone in |x - y| (DESIGN.md §10 records
+    the tradeoff).  Round-trips exactly on the 2^width-level grid
+    (`bitplane_decode`).
+    """
+    if width < 1:
+        raise ValueError(f"bit-plane width must be >= 1, got {width}")
+    levels = (1 << width) - 1
+    q = jnp.round(jnp.asarray(x01, jnp.float32) * levels).astype(jnp.uint32)
+    shifts = jnp.arange(width, dtype=jnp.uint32)
+    return ((q[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.uint8)
+
+
+def bitplane_decode(bits):
+    """Bit planes (LSB-first) -> intensity in [0,1]; exact on the grid."""
+    bits = jnp.asarray(bits)
+    width = bits.shape[-1]
+    weights = (1 << jnp.arange(width, dtype=jnp.int32)).astype(jnp.float32)
+    levels = float((1 << width) - 1)
+    return (bits.astype(jnp.float32) * weights).sum(-1) / levels
+
+
+@dataclasses.dataclass(frozen=True)
+class InputEncoding:
+    """How raw [0,1] pixels become the binary input channels of a CNN.
+
+    kind  : "thermometer" (Hamming-faithful, width+1 levels — the
+            default), "bitplane" (2^width levels, not Hamming-faithful),
+            or "sign" (width must be 1; plain x >= 0.5).
+    width : binary channels emitted per pixel (= C_in of the first conv
+            layer).
+
+    `encode_bits` maps [..., H, W] (or any shape) intensities to
+    [..., width] {0,1} bits; `encode_pm1` maps to the ±1 domain the
+    float oracles consume.  Both are deterministic and jit-safe.
+    """
+
+    kind: str = "thermometer"
+    width: int = 8
+
+    def __post_init__(self):
+        if self.kind not in ("thermometer", "bitplane", "sign"):
+            raise ValueError(f"unknown input encoding kind {self.kind!r}")
+        if self.kind == "sign" and self.width != 1:
+            raise ValueError("sign encoding is width-1 by definition")
+        if self.width < 1:
+            raise ValueError(f"encoding width must be >= 1: {self.width}")
+
+    def encode_bits(self, x01):
+        """[0,1] intensities [...] -> {0,1} uint8 bits [..., width]."""
+        if self.kind == "bitplane":
+            return bitplane_bits(x01, self.width)
+        if self.kind == "sign":
+            return (jnp.asarray(x01)[..., None] >= 0.5).astype(jnp.uint8)
+        return thermometer_bits(x01, self.width)
+
+    def encode_pm1(self, x01, dtype=jnp.float32):
+        """[0,1] intensities [...] -> ±1 values [..., width]."""
+        return from_bits(self.encode_bits(x01), dtype)
+
+
 def random_pm1(key, shape, dtype=jnp.float32):
+    """Uniform random ±1 array (fair coin per element)."""
     return from_bits(jax.random.bernoulli(key, 0.5, shape), dtype)
 
 

@@ -49,6 +49,7 @@ class MLPConfig:
 
     @property
     def n_layers(self) -> int:
+        """Number of weight layers (FC transitions)."""
         return len(self.layer_sizes) - 1
 
 
@@ -120,6 +121,7 @@ def forward(
 
 
 def loss_fn(params: Params, x_pm1, labels, cfg: MLPConfig):
+    """Cross-entropy on the (training-only) full-precision logits."""
     logits, new_params = forward(params, x_pm1, cfg, train=True)
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
@@ -139,10 +141,12 @@ class FoldedLayer:
 
     @property
     def n_out(self) -> int:
+        """Output neurons (CAM rows)."""
         return self.weights_pm1.shape[0]
 
     @property
     def n_in(self) -> int:
+        """Input bits per row (the XNOR-popcount dot width)."""
         return self.weights_pm1.shape[1]
 
 
@@ -272,6 +276,7 @@ def train_mlp(
 
 
 def eval_accuracy(params: Params, cfg: MLPConfig, x, y, topk=(1,)) -> dict:
+    """Top-k accuracy of the full-precision-logit software path."""
     logits, _ = forward(params, jnp.asarray(x), cfg)
     order = jnp.argsort(-logits, axis=-1)
     out = {}

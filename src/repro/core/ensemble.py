@@ -74,6 +74,7 @@ class EnsembleConfig:
 
     @property
     def n_passes(self) -> int:
+        """Output-layer executions in the Algorithm-1 sweep."""
         return len(self.thresholds)
 
 
@@ -95,14 +96,17 @@ class CAMEnsembleHead:
     bias_cells: int
 
     def tree_flatten(self):
+        """jax pytree protocol (heads pass through jit boundaries)."""
         return (self.cam, self.thresholds), (self.bias_cells,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """jax pytree protocol inverse of `tree_flatten`."""
         return cls(cam=children[0], thresholds=children[1], bias_cells=aux[0])
 
     @property
     def n_classes(self) -> int:
+        """Classes = CAM rows of the head."""
         return self.cam.n_rows
 
 

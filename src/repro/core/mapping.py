@@ -58,6 +58,7 @@ class TilePlan:
 
     @property
     def n_tiles(self) -> int:
+        """CAM tiles the layer occupies (row tiles x column tiles)."""
         return self.n_row_tiles * self.n_col_tiles
 
 
@@ -206,6 +207,7 @@ class InferenceCost:
 
     @property
     def inferences_per_s(self) -> float:
+        """Throughput implied by the modeled latency."""
         return 1.0 / self.latency_s if self.latency_s else float("inf")
 
 
@@ -214,6 +216,7 @@ def model_inference_cost(
     n_output_passes: int,
     energy: EnergyModel = EnergyModel(),
     batch_per_tune: int = 8192,
+    layer_queries: Optional[Sequence[int]] = None,
 ) -> InferenceCost:
     """Cycle/energy model of one inference (Algorithm 1 flow).
 
@@ -223,16 +226,26 @@ def model_inference_cost(
     the default reproduces the paper's 560 K inf/s at 25 MHz, implying
     ~10 cycles of amortized tuning per inference).
 
+    layer_queries : optional per-layer query multiplicity (default 1 per
+    layer).  A conv layer maps onto the CAM as one filter-rows array
+    searched once PER OUTPUT POSITION, so its plan executes
+    out_side**2 times per inference — `convnet.cnn_inference_cost`
+    passes those counts here.
+
     Energy basis: the macro draws its measured 0.8 mW whenever active, so
     E = P x latency (matches Table II's 703 M inf/s/W == 1.43 nJ/inf);
     the per-search active-fraction numbers remain available through
     EnergyModel.search_energy_j for sub-macro analyses.
     """
+    if layer_queries is None:
+        layer_queries = [1] * len(layer_plans)
+    if len(layer_queries) != len(layer_plans):
+        raise ValueError("layer_queries/layer_plans length mismatch")
     cycles = 0
     searches = 0
     ops = 0
-    for i, plan in enumerate(layer_plans):
-        passes = n_output_passes if i == len(layer_plans) - 1 else 1
+    for i, (plan, nq) in enumerate(zip(layer_plans, layer_queries)):
+        passes = (n_output_passes if i == len(layer_plans) - 1 else 1) * nq
         cycles += plan.cycles_per_query * passes
         searches += plan.n_tiles * passes
         ops += (

@@ -233,10 +233,12 @@ class SearchPhysics:
 
     @property
     def n_passes(self) -> int:
+        """Passes in the Algorithm-1 threshold schedule."""
         return int(self.thresholds.shape[0])
 
     @property
     def is_noiseless(self) -> bool:
+        """True when sampling returns the base thresholds bit-exactly."""
         return not self.noise.is_active
 
     @classmethod

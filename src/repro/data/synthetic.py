@@ -29,6 +29,7 @@ class DatasetSpec:
 
     @property
     def n_pixels(self) -> int:
+        """Flattened image length (side^2)."""
         return self.side * self.side
 
 
@@ -38,6 +39,8 @@ HG_LIKE = DatasetSpec("hg-like", 20, 64)
 
 def _glyph_template(rng: np.random.Generator, side: int) -> np.ndarray:
     """A class template: a few random thick strokes on a side x side grid."""
+    if side < 8:
+        raise ValueError(f"glyph side must be >= 8, got {side}")
     img = np.zeros((side, side), np.float32)
     n_strokes = rng.integers(2, 5)
     for _ in range(n_strokes):
@@ -49,10 +52,36 @@ def _glyph_template(rng: np.random.Generator, side: int) -> np.ndarray:
             x = int(x0 + t * np.cos(angle))
             y = int(y0 + t * np.sin(angle))
             if 0 <= x < side and 0 <= y < side:
+                # numpy clips the upper bound; the lower is clamped so a
+                # near-edge stroke thickens inward instead of wrapping
                 img[
                     max(x - thick, 0) : x + thick, max(y - thick, 0) : y + thick
                 ] = 1.0
     return img
+
+
+def _shift_fill(a: np.ndarray, shift: int, axis: int) -> np.ndarray:
+    """np.roll with zero fill: pixels shifted past the edge DROP.
+
+    np.roll wraps content to the opposite edge — at 28x28 the glyphs sit
+    far enough from the border that this never showed, but the 64x64 HG
+    shape draws strokes up to `side - 4` long, and shear offsets grow
+    with the row index, so reusing the generator at CNN input widths
+    silently teleported stroke pixels across the image (label noise with
+    no visual justification).  Augmentation must lose, not wrap, what
+    leaves the frame.
+    """
+    if shift == 0:
+        return a
+    out = np.zeros_like(a)
+    src = [slice(None)] * a.ndim
+    dst = [slice(None)] * a.ndim
+    if shift > 0:
+        dst[axis], src[axis] = slice(shift, None), slice(None, -shift)
+    else:
+        dst[axis], src[axis] = slice(None, shift), slice(-shift, None)
+    out[tuple(dst)] = a[tuple(src)]
+    return out
 
 
 def _augment(
@@ -60,12 +89,13 @@ def _augment(
 ) -> np.ndarray:
     side = template.shape[0]
     dx, dy = rng.integers(-2, 3, 2)
-    img = np.roll(np.roll(template, dx, axis=0), dy, axis=1)
-    # shear-ish distortion: per-row sub-pixel roll
+    img = _shift_fill(_shift_fill(template, int(dx), 0), int(dy), 1)
+    # shear-ish distortion: per-row shift (zero-filled, no wrap-around)
     shear = rng.integers(-1, 2)
     if shear:
+        img = img.copy()
         for r in range(side):
-            img[r] = np.roll(img[r], (r * shear) // max(side // 4, 1))
+            img[r] = _shift_fill(img[r], (r * shear) // max(side // 4, 1), 0)
     img = img + rng.normal(0, noise, img.shape).astype(np.float32)
     flip = rng.random(img.shape) < noise * 0.15
     img = np.where(flip, 1.0 - img, img)

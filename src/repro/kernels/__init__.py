@@ -6,6 +6,11 @@
   fused_mlp   — the ENTIRE deployed BNN in one pass: packed matvec + bias
                 + sign + in-register repack per layer, vote at the head;
                 hidden activations never leave VMEM
+  fused_conv  — the conv sibling: packed-domain binary convolution with
+                im2col folded into the channel-packed layout (per-tap
+                strided slices of the VMEM-resident feature map), then
+                the fused_mlp FC/vote tail — the end-to-end-binary CNN
+                workload in one pass
   ops         — jit'd public wrappers (interpret-mode on CPU)
   ref         — pure-jnp oracles used by the test suite
 

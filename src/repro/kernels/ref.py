@@ -26,3 +26,57 @@ def bitlinear_ref(x, w, n_bits: int | None = None) -> jax.Array:
     x: [..., K] float/int +-1;  w: [K, N] +-1.  Returns float32 [..., N].
     """
     return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32)
+
+
+def binary_conv2d_ref(x_pm1, w_pm1, stride: int = 1) -> jax.Array:
+    """±1-domain VALID conv oracle: the unpacked ground truth.
+
+    x_pm1: [B, H, W, C] ±1 activations;  w_pm1: [O, K, K, C] ±1 filters
+    (CAM-row layout, `convnet.FoldedConvLayer.weights_pm1`).  Returns
+    float32 [B, OH, OW, O] dot products — each output position is the
+    XNOR-popcount dot of its K*K*C patch against every filter row
+    (== n_bits - 2*HD in the packed domain).
+    """
+    x = jnp.asarray(x_pm1, jnp.float32)
+    w = jnp.asarray(w_pm1, jnp.float32)
+    # conv_general_dilated computes a true convolution-as-correlation
+    # with HWIO kernels, so transpose the row layout [O,K,K,C]->[K,K,C,O]
+    return jax.lax.conv_general_dilated(
+        x, jnp.transpose(w, (1, 2, 3, 0)),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv_votes_ref(folded, head, x01, encoding, side: int) -> jax.Array:
+    """Unpacked end-to-end-binary CNN oracle: raw pixels -> vote counts.
+
+    The ground truth for `kernels/fused_conv.py` and the conv pipeline:
+    encode [0,1] pixels [B, side*side] through the binary input layer,
+    run every FoldedConvLayer as sign(conv + C) in ±1 floats, flatten
+    NHWC, run the folded FC hidden layers as sign(Wx + C), and vote the
+    head with `ensemble.votes_fused`.  Bit-exactness of the packed
+    fused path against this oracle is asserted in tests/test_conv.py.
+    """
+    from repro.core.convnet import FoldedConvLayer
+    from repro.core.ensemble import votes_fused
+
+    b = jnp.asarray(x01).shape[0]
+    h = encoding.encode_pm1(
+        jnp.asarray(x01).reshape(b, side, side)
+    )
+    flat = None
+    for layer in folded[:-1]:
+        if isinstance(layer, FoldedConvLayer):
+            y = binary_conv2d_ref(h, layer.weights_pm1, layer.stride)
+            h = jnp.where(y + jnp.asarray(layer.c, jnp.float32) >= 0,
+                          1.0, -1.0)
+        else:
+            if flat is None:
+                h, flat = h.reshape(b, -1), True
+            y = h @ jnp.asarray(layer.weights_pm1.T, jnp.float32)
+            h = jnp.where(y + jnp.asarray(layer.c, jnp.float32) >= 0,
+                          1.0, -1.0)
+    if flat is None:
+        h = h.reshape(b, -1)
+    return votes_fused(head, h)

@@ -44,6 +44,18 @@ Two fused implementations, selected by `impl` (default: by backend):
 do not fit the kernel's single [B, C] result block); the twins are
 bit-exact equal so this is a pure scheduling choice.
 
+Convolutional graphs: `folded` may start with a prefix of
+`convnet.FoldedConvLayer` (a deployed end-to-end-binary CNN, e.g.
+`convnet.fold_cnn` output).  The pipeline then takes RAW [0,1] pixels
+[B, side*side]: the binary input layer (`image_encoding`, thermometer by
+default) and the channel packing run inside the jitted `_pack_fn`, the
+conv stack executes in the packed domain (`kernels/fused_conv.py` on the
+pallas path, the same shared math as one XLA program otherwise), and the
+flatten feeds the FC stage — so every entry point below (votes, silicon
+votes(key=), votes_mc, cum_votes, the votes_each serving family) works
+identically for conv and MLP deployments.  Bit-exactness bar: the
+unpacked oracle `kernels.ref.conv_votes_ref` (tests/test_conv.py).
+
 Batch-size bucketing: inputs are zero-padded up to the next bucket
 (powers of two, floor `min_bucket`) so a serving loop with ragged batch
 sizes compiles O(log B) program variants instead of one per size.
@@ -62,10 +74,11 @@ import numpy as np
 
 from repro.core import binarize
 from repro.core.bnn import FoldedLayer
+from repro.core.convnet import FoldedConvLayer
 from repro.core.device_model import NoiseModel
 from repro.core.ensemble import CAMEnsembleHead, EnsembleConfig, build_head
 from repro.core.physics import SearchPhysics
-from repro.kernels import fused_mlp
+from repro.kernels import fused_conv, fused_mlp
 
 
 def next_bucket(n: int, min_bucket: int = 64,
@@ -125,21 +138,6 @@ def _head_hd_xla(x_packed, layer_ws, layer_cs, layer_n_bits, head_rows,
         if q.shape[1] < kw_next:
             q = jnp.pad(q, ((0, 0), (0, kw_next - q.shape[1])))
     return binarize.hamming_packed(q[:, None, :], head_rows)
-
-
-def _votes_xla(x_packed, layer_ws, layer_cs, layer_n_bits, head_rows,
-               thresholds, bias_cells: int):
-    """Noiseless fused votes as straight-line jnp (one XLA program).
-
-    Bit-exact equal to `fused_mlp.fused_mlp_votes` (integer arithmetic
-    throughout; calibrated float thresholds compare exactly too).
-    """
-    hd = _head_hd_xla(
-        x_packed, layer_ws, layer_cs, layer_n_bits, head_rows, bias_cells
-    )
-    return (hd[:, :, None] <= thresholds[None, None, :]).astype(
-        jnp.int32
-    ).sum(-1)
 
 
 @dataclasses.dataclass
@@ -267,7 +265,11 @@ class CompiledPipeline:
         return self.physics
 
     def votes(self, x_pm1: jax.Array, key: Optional[jax.Array] = None):
-        """Vote counts for a ±1 input batch [B, n_in] -> [B, C] int32.
+        """Vote counts for an input batch [B, n_in] -> [B, C] int32.
+
+        Input domain: ±1 activations for MLP pipelines; RAW [0,1] pixels
+        for conv pipelines (n_in = image_side**2 — the binary input
+        encoding and channel packing run inside the jitted pack step).
 
         With `key` (requires a `noise=`-compiled pipeline) the votes are
         one silicon-noise realization; with the NOISELESS model this path
@@ -283,7 +285,11 @@ class CompiledPipeline:
 
     def votes_packed(self, x_packed: jax.Array,
                      key: Optional[jax.Array] = None) -> jax.Array:
-        """Vote counts for an already-packed input batch [B, Kw0]."""
+        """Vote counts for an already-packed input batch [B, Kw0].
+
+        Conv pipelines: Kw0 = side*side*Cw0, the row-flattened channel-
+        packed encoded image the jitted pack step emits (`_pack_input`).
+        """
         x_packed, b = self._bucketed(x_packed)
         if key is None:
             return self._trim(self._votes_packed(x_packed), b)
@@ -407,11 +413,11 @@ class CompiledPipeline:
 
 
 def compile_pipeline(
-    folded: Sequence[FoldedLayer],
+    folded: Sequence,
     ens_cfg: EnsembleConfig | None = None,
     *,
     impl: str | None = None,
-    bq: int = 256,
+    bq: int | None = None,
     chunk: int = 4,
     min_bucket: int = 64,
     max_bucket: int | None = None,
@@ -419,14 +425,25 @@ def compile_pipeline(
     noise: NoiseModel | None = None,
     params=None,
     donate: bool = False,
+    image_side: int | None = None,
+    image_encoding: binarize.InputEncoding | None = None,
 ) -> CompiledPipeline:
     """Compile a folded BNN + ensemble head into a fused batch classifier.
 
     folded  : `bnn.fold` output — hidden layers + the output layer (last).
+              May start with a prefix of `convnet.FoldedConvLayer`
+              (`convnet.fold_cnn` output): the pipeline then runs the
+              end-to-end-binary CNN workload and its input domain becomes
+              RAW [0,1] pixels [B, image_side**2] (the binary input
+              encoding runs inside the jitted pack step).
     ens_cfg : Algorithm-1 config (thresholds / bias cells); default paper's.
     impl    : "pallas" | "xla" | None (auto: pallas on TPU, xla elsewhere —
               the Pallas kernel only *executes* off-TPU in interpret mode,
               which is for semantics tests, not speed).
+    bq      : Pallas batch-block size; default 256 for MLP graphs, 64
+              for conv graphs (the conv kernel's per-tap XOR temporary
+              scales the VMEM working set ~4x — DESIGN.md §10 derives
+              both budgets).
     noise   : optional NoiseModel — compiles the silicon-mode twins
               (votes(key=), votes_mc, cum_votes, and the per-request-key
               votes_each / votes_mc_each serving entries) with a
@@ -445,6 +462,12 @@ def compile_pipeline(
               just ignore the donation.  Off by default because
               `votes_packed` is public API and donation invalidates the
               caller's array.
+    image_side : REQUIRED for conv graphs — square input image side
+              (`n_in = image_side**2` raw pixels).  Rejected for pure
+              MLP graphs.
+    image_encoding : the binary input layer for conv graphs
+              (`binarize.InputEncoding`); its width must equal the first
+              conv layer's c_in.  Default: thermometer of that width.
     """
     ens_cfg = ens_cfg or EnsembleConfig()
     if len(folded) < 1:
@@ -456,18 +479,27 @@ def compile_pipeline(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    hidden, out_layer = list(folded[:-1]), folded[-1]
+    rest = list(folded)
+    conv_layers: list[FoldedConvLayer] = []
+    while rest and isinstance(rest[0], FoldedConvLayer):
+        conv_layers.append(rest.pop(0))
+    if any(isinstance(l, FoldedConvLayer) for l in rest):
+        raise ValueError("conv layers must form a prefix of `folded`")
+    if not rest:
+        raise ValueError("need an output FC layer after the conv stack")
+    if conv_layers and image_side is None:
+        raise ValueError("conv graphs need image_side=")
+    if not conv_layers and (image_side is not None
+                            or image_encoding is not None):
+        raise ValueError("image_side/image_encoding are conv-only options")
+    if bq is None:
+        # the conv kernel's [bq, O, O, c_out, Cw] per-tap temporary is
+        # ~4x the MLP kernel's working set per batch row (DESIGN.md §10)
+        bq = 64 if conv_layers else 256
+
+    hidden, out_layer = list(rest[:-1]), rest[-1]
     head = build_head(out_layer, ens_cfg)
     n_classes = head.n_classes
-
-    if hidden:
-        pack_fn = jax.jit(binarize.pack_pm1)
-    else:
-        from repro.core.cam import query_with_bias
-
-        pack_fn = jax.jit(
-            functools.partial(query_with_bias, bias_cells=head.bias_cells)
-        )
 
     layer_ws = tuple(
         binarize.pack_bits(jnp.asarray((l.weights_pm1 > 0).astype(np.uint8)))
@@ -477,6 +509,60 @@ def compile_pipeline(
     layer_n_bits = tuple(int(l.n_in) for l in hidden)
     head_rows = head.cam.rows_packed
     thresholds = head.thresholds
+
+    conv_metas = conv_ws = conv_cs = None
+    head_direct = False
+    if conv_layers:
+        enc = image_encoding or binarize.InputEncoding(
+            "thermometer", conv_layers[0].c_in
+        )
+        if enc.width != conv_layers[0].c_in:
+            raise ValueError(
+                f"encoding width {enc.width} != first conv c_in "
+                f"{conv_layers[0].c_in}"
+            )
+        conv_metas = fused_conv.conv_metas_for(conv_layers, image_side)
+        conv_ws = tuple(fused_conv.pack_conv_rows(l) for l in conv_layers)
+        conv_cs = tuple(jnp.asarray(l.c, jnp.int32) for l in conv_layers)
+        mf = conv_metas[-1]
+        n_pos, c_f = mf.out_side * mf.out_side, mf.c_out
+        first_fc = hidden[0] if hidden else out_layer
+        if int(first_fc.n_in) != n_pos * c_f:
+            raise ValueError(
+                f"first FC layer n_in {first_fc.n_in} != flattened conv "
+                f"features {n_pos}*{c_f}"
+            )
+        head_direct = not hidden
+        if head_direct and c_f % 32:
+            raise ValueError(
+                "conv -> head-direct needs last conv c_out % 32 == 0 "
+                f"(word-aligned flatten), got {c_f}"
+            )
+        if hidden:
+            # the flatten keeps per-position word padding — repack the
+            # first FC layer's rows with the matching alignment
+            layer_ws = (
+                fused_conv.pack_fc_rows_positionwise(
+                    (hidden[0].weights_pm1 > 0).astype(np.uint8),
+                    n_pos, c_f,
+                ),
+            ) + layer_ws[1:]
+        side, cw0 = image_side, conv_metas[0].cw_in
+
+        def _pack_conv(x01):
+            img = jnp.asarray(x01).reshape(-1, side, side)
+            words = binarize.pack_bits(enc.encode_bits(img))
+            return words.reshape(words.shape[0], side * side * cw0)
+
+        pack_fn = jax.jit(_pack_conv)
+    elif hidden:
+        pack_fn = jax.jit(binarize.pack_pm1)
+    else:
+        from repro.core.cam import query_with_bias
+
+        pack_fn = jax.jit(
+            functools.partial(query_with_bias, bias_cells=head.bias_cells)
+        )
 
     phys = None
     if noise is not None:
@@ -491,17 +577,53 @@ def compile_pipeline(
     ws = tuple(fused_mlp._pad_words(w, chunk) for w in layer_ws)
     hr = fused_mlp._pad_words(head_rows, chunk)
 
-    def _hd_xla(x_packed):
-        kw0 = (ws[0] if ws else hr).shape[1]
-        if x_packed.shape[1] < kw0:
-            x_packed = jnp.pad(
-                x_packed, ((0, 0), (0, kw0 - x_packed.shape[1]))
+    if conv_layers:
+        bias_words = (fused_conv.bias_drive_words(head.bias_cells)
+                      if head_direct else None)
+
+        def _front(x_packed):
+            # [B, S*S*Cw0] -> conv stack -> flattened packed FC query
+            x4 = x_packed.reshape(-1, image_side, image_side, cw0)
+            return fused_conv.conv_stage_packed(
+                x4, conv_ws, conv_cs, conv_metas, bias_words
             )
+    else:
+        def _front(x_packed):
+            return x_packed
+
+    def _hd_xla(x_packed):
+        q = _front(x_packed)
+        kw0 = (ws[0] if ws else hr).shape[1]
+        if q.shape[1] < kw0:
+            q = jnp.pad(q, ((0, 0), (0, kw0 - q.shape[1])))
         return _head_hd_xla(
-            x_packed, ws, layer_cs, layer_n_bits, hr, head.bias_cells
+            q, ws, layer_cs, layer_n_bits, hr, head.bias_cells
         )
 
-    if impl == "pallas":
+    if impl == "pallas" and conv_layers:
+        def votes_packed_fn(x_packed):
+            return fused_conv.fused_conv_votes(
+                x_packed.reshape(-1, image_side, image_side, cw0),
+                conv_ws, conv_cs, conv_metas,
+                layer_ws, layer_cs, layer_n_bits, head_rows, thresholds,
+                bias_cells=head.bias_cells, bq=bq, chunk=chunk,
+                interpret=interpret, head_direct=head_direct,
+            )
+
+        @functools.partial(jax.jit, **donate_kw)
+        def votes_noisy_packed_fn(x_packed, key):
+            t = phys.sample(
+                key, batch_shape=(x_packed.shape[0],), n_rows=n_classes
+            )  # [P, B, C]
+            return fused_conv.fused_conv_votes(
+                x_packed.reshape(-1, image_side, image_side, cw0),
+                conv_ws, conv_cs, conv_metas,
+                layer_ws, layer_cs, layer_n_bits, head_rows, thresholds,
+                bias_cells=head.bias_cells, bq=bq, chunk=chunk,
+                interpret=interpret, head_direct=head_direct,
+                thr_samples=jnp.moveaxis(t, 0, -1),  # [B, C, P] operand
+            )
+    elif impl == "pallas":
         def votes_packed_fn(x_packed):
             return fused_mlp.fused_mlp_votes(
                 x_packed, layer_ws, layer_cs, layer_n_bits,
@@ -525,15 +647,10 @@ def compile_pipeline(
     else:
         @functools.partial(jax.jit, **donate_kw)
         def votes_packed_fn(x_packed):
-            kw0 = (ws[0] if ws else hr).shape[1]
-            if x_packed.shape[1] < kw0:
-                x_packed = jnp.pad(
-                    x_packed, ((0, 0), (0, kw0 - x_packed.shape[1]))
-                )
-            return _votes_xla(
-                x_packed, ws, layer_cs, layer_n_bits, hr, thresholds,
-                head.bias_cells,
-            )
+            hd = _hd_xla(x_packed)
+            return (hd[:, :, None] <= thresholds[None, None, :]).astype(
+                jnp.int32
+            ).sum(-1)
 
         @functools.partial(jax.jit, **donate_kw)
         def votes_noisy_packed_fn(x_packed, key):
@@ -603,9 +720,15 @@ def compile_pipeline(
 
             return jax.vmap(per_req)(hd, keys)  # [B, C]
 
+    if conv_layers:
+        n_in = int(image_side) ** 2  # raw [0,1] pixels in, encode inside
+    elif hidden:
+        n_in = int(hidden[0].n_in)
+    else:
+        n_in = int(out_layer.n_in)
     return CompiledPipeline(
         head=head,
-        n_in=int(hidden[0].n_in) if hidden else int(out_layer.n_in),
+        n_in=n_in,
         n_classes=n_classes,
         impl=impl,
         min_bucket=min_bucket,

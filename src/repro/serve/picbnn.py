@@ -171,6 +171,7 @@ class GroupHandle:
         return self._slab.n
 
     def done(self) -> bool:
+        """True once every request in the burst has a published result."""
         slab = self._slab
         return slab.placed >= slab.n and all(
             b.event.is_set() for (b, _lo, _bp, _k) in slab.spans
@@ -311,6 +312,7 @@ class ServerStats:
     per_model: dict[str, ModelStats]
 
     def summary(self) -> str:
+        """Human-readable multi-line serving report."""
         lines = [
             f"served {self.n_requests} requests in {self.n_batches} "
             f"batches over {self.wall_s:.3f}s -> {self.inf_per_s:,.0f} "
@@ -385,12 +387,21 @@ class PicBnnServer:
     # ------------------------------------------------------------------
     def register(self, model_id: str, pipe: CompiledPipeline, *,
                  layer_sizes: Optional[Sequence[int]] = None,
+                 silicon_cost: Optional[mapping.InferenceCost] = None,
                  mc_samples: int = 0, warmup: bool = False) -> None:
         """Add a model to the registry.
 
-        layer_sizes : optional (n_in, ..., n_classes) of the deployed net
+        The pipeline may be any `compile_pipeline` output — MLP (±1
+        activation requests of width `pipe.n_in`) or conv (raw [0,1]
+        pixel requests of width image_side**2); the serving layer only
+        sees [n_in] request rows either way.
+
+        layer_sizes : optional (n_in, ..., n_classes) of a deployed MLP
             — enables the Table-II silicon-equivalent throughput in
             stats() via `mapping.model_inference_cost`.
+        silicon_cost: alternative to layer_sizes for non-MLP graphs —
+            a precomputed `mapping.InferenceCost` (e.g.
+            `convnet.cnn_inference_cost` for CNN deployments).
         mc_samples  : >0 routes this (silicon) model's requests through
             `votes_mc_each` and serves the prediction of the summed
             Monte-Carlo votes; 0 serves one realization per request.
@@ -404,7 +415,9 @@ class PicBnnServer:
         silicon = pipe.physics is not None and not pipe.physics.is_noiseless
         if mc_samples and not silicon:
             raise ValueError("mc_samples needs a silicon-mode pipeline")
-        cost = None
+        if layer_sizes is not None and silicon_cost is not None:
+            raise ValueError("pass layer_sizes OR silicon_cost, not both")
+        cost = silicon_cost
         if layer_sizes is not None:
             if (int(layer_sizes[0]), int(layer_sizes[-1])) != \
                     (pipe.n_in, pipe.n_classes):
@@ -453,6 +466,8 @@ class PicBnnServer:
     # lifecycle
     # ------------------------------------------------------------------
     def start(self) -> "PicBnnServer":
+        """Validate the registry and launch the dispatch/completion
+        threads; idempotent.  Returns self (context-manager entry)."""
         if self._started:
             return self
         if not self._models:

@@ -64,6 +64,7 @@ class BatchingPolicy:
 
     @property
     def max_wait_s(self) -> float:
+        """The dispatch deadline in seconds."""
         return self.max_wait_us * 1e-6
 
 
@@ -85,6 +86,7 @@ class LatencySummary:
 
 
 def latency_summary(values_ms) -> LatencySummary:
+    """Count/mean/p50/p95/p99 (ms) of a latency sample array."""
     v = np.asarray(values_ms, np.float64)
     if v.size == 0:
         return LatencySummary(0, 0.0, 0.0, 0.0, 0.0, 0.0)
@@ -109,6 +111,7 @@ class Span:
 
     @property
     def n(self) -> int:
+        """Requests covered by this span."""
         return self.hi - self.lo
 
 
@@ -149,10 +152,12 @@ class MicroBatcher:
 
     @property
     def depth(self) -> int:
+        """Requests currently queued across all lanes."""
         return self._depth
 
     @property
     def closed(self) -> bool:
+        """True once close() was called; puts are rejected after."""
         return self._closed
 
     def put(self, lane: str, lot: Any, size: int = 1,

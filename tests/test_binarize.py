@@ -79,6 +79,90 @@ def test_packed_width(k):
     assert B.packed_width(k) == (k + 31) // 32
 
 
+def test_thermometer_roundtrip_and_monotone():
+    """Encode/decode round-trip within quantization; code is monotone."""
+    x = np.linspace(0.0, 1.0, 33, dtype=np.float32)
+    for width in (1, 3, 8, 16):
+        bits = np.asarray(B.thermometer_bits(jnp.asarray(x), width))
+        assert bits.shape == (33, width) and set(np.unique(bits)) <= {0, 1}
+        # thermometer property: all ones then all zeros along the width
+        assert (np.diff(bits.astype(np.int8), axis=-1) <= 0).all()
+        dec = np.asarray(B.thermometer_decode(jnp.asarray(bits)))
+        # worst-case round-trip error is half a level
+        assert np.abs(dec - x).max() <= 0.5 / (width + 1) + 1e-6
+        # fill level is monotone in intensity
+        fills = bits.sum(-1)
+        assert (np.diff(fills) >= 0).all()
+
+
+def test_thermometer_edge_cases():
+    """All-zero image -> all-zero bits; width-1 == plain 0.5 threshold."""
+    zero = jnp.zeros((4, 7))
+    assert not np.asarray(B.thermometer_bits(zero, 8)).any()
+    x = jnp.asarray([0.0, 0.49, 0.5, 1.0])
+    np.testing.assert_array_equal(
+        np.asarray(B.thermometer_bits(x, 1))[:, 0], [0, 0, 1, 1]
+    )
+    with pytest.raises(ValueError):
+        B.thermometer_bits(x, 0)
+
+
+def test_thermometer_hamming_faithful():
+    """HD between thermometer codes == quantized intensity gap — the
+    property that makes the encoding the right input layer for a
+    Hamming-tolerant CAM search (DESIGN.md §10)."""
+    width = 10
+    x = jnp.asarray(np.linspace(0, 1, 12, dtype=np.float32))
+    bits = B.thermometer_bits(x, width)
+    fills = np.asarray(bits).sum(-1).astype(np.int64)
+    hd = np.asarray(
+        B.hamming_packed(
+            B.pack_bits(bits)[:, None, :], B.pack_bits(bits)[None, :, :]
+        )
+    )
+    np.testing.assert_array_equal(hd, np.abs(fills[:, None] - fills[None, :]))
+
+
+def test_bitplane_roundtrip():
+    """Exact round-trip on the 2^width-level grid; LSB-first planes."""
+    for width in (1, 4, 8):
+        levels = (1 << width) - 1
+        x = jnp.asarray(np.arange(levels + 1, dtype=np.float32) / levels)
+        bits = B.bitplane_bits(x, width)
+        np.testing.assert_allclose(
+            np.asarray(B.bitplane_decode(bits)), np.asarray(x), atol=1e-6
+        )
+        # plane t of the quantized value q is (q >> t) & 1
+        q = np.arange(levels + 1)
+        np.testing.assert_array_equal(
+            np.asarray(bits), (q[:, None] >> np.arange(width)) & 1
+        )
+    assert not np.asarray(B.bitplane_bits(jnp.zeros((3, 2)), 5)).any()
+
+
+def test_input_encoding_dispatch_and_validation():
+    enc = B.InputEncoding("thermometer", 4)
+    x = jnp.asarray([[0.0, 0.3, 0.9]])
+    np.testing.assert_array_equal(
+        np.asarray(enc.encode_bits(x)),
+        np.asarray(B.thermometer_bits(x, 4)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(enc.encode_pm1(x)),
+        2.0 * np.asarray(enc.encode_bits(x)) - 1.0,
+    )
+    sign = B.InputEncoding("sign", 1)
+    np.testing.assert_array_equal(
+        np.asarray(sign.encode_bits(x))[..., 0], [[0, 0, 1]]
+    )
+    with pytest.raises(ValueError):
+        B.InputEncoding("sign", 2)
+    with pytest.raises(ValueError):
+        B.InputEncoding("nope", 4)
+    with pytest.raises(ValueError):
+        B.InputEncoding("bitplane", 0)
+
+
 def test_binary_matvec_packed():
     rng = np.random.default_rng(1)
     w = rng.choice([-1.0, 1.0], (10, 96))

@@ -33,6 +33,39 @@ def test_binarize_images_pm1():
     np.testing.assert_array_equal(binarize_images(x), [[-1, -1, 1, 1]])
 
 
+def test_augmentation_never_wraps():
+    """Shift/shear augmentation zero-fills at the frame edge — content
+    leaving one side must NOT reappear on the opposite side (the 64x64
+    HG glyphs draw near-edge strokes, so np.roll-style wrap-around was
+    silent label noise at CNN input widths)."""
+    from repro.data.synthetic import _augment, _shift_fill
+
+    rng = np.random.default_rng(0)
+    for side in (28, 64):
+        # a template with content ONLY on the left edge column band
+        template = np.zeros((side, side), np.float32)
+        template[:, :2] = 1.0
+        for trial in range(32):
+            out = _augment(np.random.default_rng(trial), template, 0.0)
+            # zero noise: any pixel on the far right could only have
+            # arrived by wrapping (max rightward shift+shear ~ side//8)
+            assert not out[:, side // 2:].any(), (side, trial)
+    # _shift_fill drops, never wraps, in both directions/axes
+    a = np.zeros((4, 4), np.float32)
+    a[0, 0] = 1.0
+    assert _shift_fill(a, -1, 0).sum() == 0.0
+    assert _shift_fill(a, -1, 1).sum() == 0.0
+    assert _shift_fill(a, 1, 0)[1, 0] == 1.0
+    np.testing.assert_array_equal(_shift_fill(a, 0, 0), a)
+
+
+def test_glyph_template_rejects_tiny_sides():
+    from repro.data.synthetic import _glyph_template
+
+    with pytest.raises(ValueError, match="side"):
+        _glyph_template(np.random.default_rng(0), 4)
+
+
 def test_synthetic_stream_restart_determinism():
     cfg = DataConfig(batch=4, seq_len=16, vocab_size=100, seed=5)
     it = synthetic_stream(cfg)

@@ -133,6 +133,26 @@ def test_pipeline_batch_bucketing():
     assert pipeline.next_bucket(1, 32) == 32
 
 
+def test_next_bucket_max_bucket_boundaries():
+    """Boundary behavior at the serving cap: n == max_bucket passes, one
+    more fails loudly, and a non-power-of-two cap rejects any n whose
+    bucket overshoots it (even with n < max_bucket)."""
+    assert pipeline.next_bucket(64, 64, max_bucket=64) == 64
+    assert pipeline.next_bucket(1, 64, max_bucket=64) == 64
+    assert pipeline.next_bucket(128, 64, max_bucket=128) == 128
+    with pytest.raises(ValueError, match="max_bucket"):
+        pipeline.next_bucket(65, 64, max_bucket=64)
+    with pytest.raises(ValueError, match="max_bucket"):
+        pipeline.next_bucket(129, 64, max_bucket=128)
+    # a non-power-of-two cap: 70 buckets to 128 > 100 -> reject
+    with pytest.raises(ValueError, match="max_bucket"):
+        pipeline.next_bucket(70, 64, max_bucket=100)
+    assert pipeline.next_bucket(60, 64, max_bucket=100) == 64
+    # empty batches still rejected regardless of cap
+    with pytest.raises(ValueError, match=">= 1"):
+        pipeline.next_bucket(0, 64, max_bucket=64)
+
+
 def test_pack_unpack_roundtrip_multidim():
     """pack_bits/unpack_bits round-trip with multi-dim leading axes, and
     the dot-product fast path matches the shift-broadcast reference."""
