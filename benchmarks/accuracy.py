@@ -25,6 +25,8 @@ import numpy as np
 from repro import pipeline
 from repro.core import bnn, ensemble, mapping
 from repro.core.device_model import SILICON
+from repro.deploy import deploy
+from repro.spec import VOTES, InferenceSpec
 from repro.data.synthetic import (
     HG_LIKE,
     MNIST_LIKE,
@@ -32,17 +34,21 @@ from repro.data.synthetic import (
     make_dataset,
 )
 
+#: the silicon truncated-sweep request this benchmark Monte-Carlos
+CUM_SILICON = InferenceSpec(noise="batch", cumulative=True)
+
 
 def _sweep_noiseless_fused(pipe: "pipeline.CompiledPipeline", votes, n_passes):
     """Guarded `sweep_from_votes`: valid ONLY for a noiseless pipeline.
 
     The staircase reconstruction breaks under sampled thresholds (see
     ensemble.sweep_from_votes / DESIGN.md §8); silicon-mode sweeps must go
-    through `CompiledPipeline.cum_votes` instead.
+    through the cumulative spec (`InferenceSpec(noise="batch",
+    cumulative=True)`) instead.
     """
     assert pipe.physics is None or pipe.physics.is_noiseless, (
-        "sweep_from_votes is noiseless-only; use pipe.cum_votes(x, key) "
-        "for silicon-mode truncated sweeps"
+        "sweep_from_votes is noiseless-only; run the cumulative silicon "
+        "spec for silicon-mode truncated sweeps"
     )
     return ensemble.sweep_from_votes(votes, n_passes)
 
@@ -76,8 +82,8 @@ def run_dataset(name: str, spec, hidden: int, epochs: int, seed: int = 0,
     # totals (ensemble.sweep_from_votes, noiseless-only — guarded)
     # instead of 33 re-searches.
     ecfg = ensemble.EnsembleConfig()
-    pipe = pipeline.compile_pipeline(folded, ecfg)
-    votes = pipe.votes(jnp.asarray(vxb))
+    pipe = deploy(folded, ens_cfg=ecfg).pipeline()
+    votes = pipe.run(jnp.asarray(vxb), VOTES)
     cum = _sweep_noiseless_fused(pipe, votes, ecfg.n_passes)
     sweep = ensemble.accuracy_from_cumulative(cum, vy)
     for p in (1, 3, 5, 9, 17, 25, 33):
@@ -87,10 +93,11 @@ def run_dataset(name: str, spec, hidden: int, epochs: int, seed: int = 0,
     # threaded through (sampled per-pass thresholds), Monte-Carlo over
     # seeds — per-pass trajectories via cum_votes at fused speed.
     n_mc = 2 if epochs <= 3 else 4
-    pipe_si = pipeline.compile_pipeline(folded, ecfg, noise=SILICON)
+    pipe_si = deploy(folded, ens_cfg=ecfg, noise=SILICON).pipeline()
     acc = {}
     for i in range(n_mc):
-        cum = pipe_si.cum_votes(jnp.asarray(vxb), jax.random.PRNGKey(seed + 1 + i))
+        cum = pipe_si.run(jnp.asarray(vxb), CUM_SILICON,
+                          key=jax.random.PRNGKey(seed + 1 + i))
         s = ensemble.accuracy_from_cumulative(cum, vy)
         for p, d in s.items():
             for k, v in d.items():

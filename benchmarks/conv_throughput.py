@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.spec import VOTES  # the one spec this benchmark times
 from repro.configs.paper_cnn import HG_CNN, MNIST_CNN, build_cnn_pipeline
 from repro.core import binarize, convnet, ensemble
 from repro.core.convnet import CNNConfig
@@ -49,6 +50,7 @@ from repro.data.synthetic import HG_LIKE, MNIST_LIKE, make_dataset
 from repro.kernels import fused_conv
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
+
 
 
 def make_baseline(cfg: CNNConfig, folded, head):
@@ -112,10 +114,10 @@ def bench_throughput(cfg: CNNConfig, name: str, batches, reps, seed=0):
     rows = []
     for b in batches:
         x = rng.random((b, cfg.n_in)).astype(np.float32)
-        v_fused = np.asarray(pipe.votes(x))
+        v_fused = np.asarray(pipe.run(x, VOTES))
         v_base = np.asarray(baseline(x))
         np.testing.assert_array_equal(v_fused, v_base)  # bit-exact gate
-        t_fused = _time(pipe.votes, x, reps)
+        t_fused = _time(lambda z: pipe.run(z, VOTES), x, reps)
         t_base = _time(baseline, x, reps)
         rows.append({
             "model": name,
@@ -139,7 +141,7 @@ def bench_accuracy(cfg: CNNConfig, name: str, spec, *, n_train, n_test,
                                epochs=epochs)
     sw = convnet.eval_cnn_accuracy(params, cfg, vx, vy)["top1"]
     pipe = build_cnn_pipeline(cfg, convnet.fold_cnn(params, cfg))
-    votes = pipe.votes(jnp.asarray(vx))
+    votes = pipe.run(jnp.asarray(vx), VOTES)
     n_passes = int(pipe.head.thresholds.shape[0])
     # noiseless truncated-sweep identity: the whole Fig.-5-style curve
     # from ONE fused pass (sweep_from_votes is noiseless-only)

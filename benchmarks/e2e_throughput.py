@@ -35,8 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import pipeline
 from repro.core import binarize, bnn, ensemble
+from repro.deploy import deploy
+from repro.spec import VOTES  # the one spec this benchmark times
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
@@ -93,18 +94,18 @@ def _time(fn, x, reps):
 def bench(sizes=PAPER_SIZES, batches=(256, 1024), reps=10, seed=0):
     folded = random_folded(sizes, seed=seed)
     ecfg = ensemble.EnsembleConfig()
-    pipe = pipeline.compile_pipeline(folded, ecfg)
+    pipe = deploy(folded, ens_cfg=ecfg).pipeline()
     baseline = make_baseline(folded, pipe.head)
 
     rng = np.random.default_rng(seed + 1)
     results = []
     for b in batches:
         x = jnp.asarray(rng.choice([-1.0, 1.0], (b, sizes[0])), jnp.float32)
-        v_fused = np.asarray(pipe.votes(x))
+        v_fused = np.asarray(pipe.run(x, VOTES))
         v_base = np.asarray(baseline(x))
         np.testing.assert_array_equal(v_fused, v_base)  # bit-exact gate
 
-        t_fused = _time(pipe.votes, x, reps)
+        t_fused = _time(lambda z: pipe.run(z, VOTES), x, reps)
         t_base = _time(baseline, x, reps)
         results.append({
             "batch": int(b),

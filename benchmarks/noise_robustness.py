@@ -5,8 +5,9 @@ recovers the software logit ranking *under analog PVT noise*.  This
 benchmark quantifies that claim as a robustness curve: top-1 accuracy of
 the fused silicon-mode pipeline versus noise magnitude, mean ± band over
 seeds, evaluated by Monte-Carlo through
-`pipeline.CompiledPipeline.votes_mc` (Hamming distances computed once,
-sampled thresholds vmapped — the physics-threaded fast path).
+the batch-draw Monte-Carlo spec (`InferenceSpec(noise="batch",
+mc_samples=S)`; Hamming distances computed once, sampled thresholds
+vmapped — the physics-threaded fast path).
 
 Deployed net: a random folded paper-shape MLP; ground truth is the
 full-precision logit argmax of the SAME net, so the metric isolates
@@ -41,10 +42,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import pipeline
 from repro.core import ensemble
 from repro.core.device_model import SILICON, NoiseModel
+from repro.deploy import deploy
+from repro.spec import VOTES, InferenceSpec
 from benchmarks.e2e_throughput import PAPER_SIZES, random_folded
+
+
+def _mc_spec(n_mc: int) -> InferenceSpec:
+    """The batch-draw Monte-Carlo request this benchmark sweeps."""
+    return InferenceSpec(noise="batch", mc_samples=int(n_mc))
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
@@ -68,7 +75,9 @@ def _mc_accuracy(pipe, x, labels, seeds, n_mc):
     """Mean / band of top-1 accuracy over seeds, n_mc MC draws each."""
     per_seed = []
     for s in seeds:
-        votes = np.asarray(pipe.votes_mc(x, jax.random.PRNGKey(s), n_mc))
+        votes = np.asarray(
+            pipe.run(x, _mc_spec(n_mc), key=jax.random.PRNGKey(s))
+        )
         per_seed.append((votes.argmax(-1) == labels[None]).mean())
     return float(np.mean(per_seed)), float(np.std(per_seed))
 
@@ -82,9 +91,9 @@ def bench(sizes=PAPER_SIZES, batch=512, n_mc=64, n_seeds=4,
     labels, hidden_pm1 = _fp_labels(folded, x)
     seeds = list(range(100, 100 + n_seeds))
 
-    pipe_nl = pipeline.compile_pipeline(folded)
+    pipe_nl = deploy(folded).pipeline()
     acc_noiseless = float(
-        (np.asarray(pipe_nl.votes(x)).argmax(-1) == labels).mean()
+        (np.asarray(pipe_nl.run(x, VOTES)).argmax(-1) == labels).mean()
     )
 
     rows = [("noise", "noiseless", 0.0, acc_noiseless, 0.0)]
@@ -93,7 +102,7 @@ def bench(sizes=PAPER_SIZES, batch=512, n_mc=64, n_seeds=4,
     for s_hd in sigma_hd_grid:
         nm = NoiseModel(sigma_hd=float(s_hd), sigma_vref=0.0,
                         sigma_tjitter=0.0)
-        pipe = pipeline.compile_pipeline(folded, noise=nm)
+        pipe = deploy(folded, noise=nm).pipeline()
         mean, band = _mc_accuracy(pipe, x, labels, seeds, n_mc)
         curves["sigma_hd"].append(
             {"sigma_hd": float(s_hd), "top1_mean": mean, "top1_std": band}
@@ -103,7 +112,7 @@ def bench(sizes=PAPER_SIZES, batch=512, n_mc=64, n_seeds=4,
     # the TDC-competitor failure mode the paper contrasts against
     for d in drift_grid:
         nm = dataclasses.replace(SILICON, temp_drift_hd=float(d))
-        pipe = pipeline.compile_pipeline(folded, noise=nm)
+        pipe = deploy(folded, noise=nm).pipeline()
         mean, band = _mc_accuracy(pipe, x, labels, seeds, n_mc)
         curves["temp_drift_hd"].append(
             {"temp_drift_hd": float(d), "top1_mean": mean, "top1_std": band}
@@ -111,16 +120,17 @@ def bench(sizes=PAPER_SIZES, batch=512, n_mc=64, n_seeds=4,
         rows.append(("noise", "temp_drift_hd", float(d), mean, band))
 
     # --- LLN headline: full SILICON model at 33 passes vs noiseless ------
-    pipe_si = pipeline.compile_pipeline(folded, noise=SILICON)
+    pipe_si = deploy(folded, noise=SILICON).pipeline()
     acc_si_mean, acc_si_band = _mc_accuracy(pipe_si, x, labels, seeds, n_mc)
     rows.append(("noise", "silicon-33pass", 0.0, acc_si_mean, acc_si_band))
 
     # --- fused-MC vs sequential votes_faithful at equal sample count -----
     key = jax.random.PRNGKey(7)
     n_time = n_mc
-    jax.block_until_ready(pipe_si.votes_mc(x, key, n_time))  # compile
+    mc = _mc_spec(n_time)
+    jax.block_until_ready(pipe_si.run(x, mc, key=key))  # compile
     t0 = time.perf_counter()
-    jax.block_until_ready(pipe_si.votes_mc(x, key, n_time))
+    jax.block_until_ready(pipe_si.run(x, mc, key=key))
     t_fused = time.perf_counter() - t0
 
     head = pipe_si.head
@@ -192,10 +202,14 @@ def trained_lln(n_mc=4, seed=0, epochs=6):
     labels = np.asarray(vy)
     x = jnp.asarray(vxb)
 
-    pipe_nl = pipeline.compile_pipeline(folded)
-    acc_nl = float((np.asarray(pipe_nl.votes(x)).argmax(-1) == labels).mean())
-    pipe_si = pipeline.compile_pipeline(folded, noise=SILICON)
-    votes = np.asarray(pipe_si.votes_mc(x, jax.random.PRNGKey(seed + 1), n_mc))
+    pipe_nl = deploy(folded).pipeline()
+    acc_nl = float(
+        (np.asarray(pipe_nl.run(x, VOTES)).argmax(-1) == labels).mean()
+    )
+    pipe_si = deploy(folded, noise=SILICON).pipeline()
+    votes = np.asarray(
+        pipe_si.run(x, _mc_spec(n_mc), key=jax.random.PRNGKey(seed + 1))
+    )
     acc_si = float((votes.argmax(-1) == labels[None]).mean())
     return {
         "acc_noiseless": acc_nl,

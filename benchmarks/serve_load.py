@@ -6,7 +6,7 @@ does the serving layer keep once requests arrive one image at a time and
 must be coalesced, staged, and fanned out — and what latency do clients
 see as offered load approaches saturation?
 
-  raw         — `pipe.votes` timed at exactly max_batch (the upper
+  raw         — the noiseless vote spec timed at exactly max_batch (the upper
                 bound: zero scheduling, zero per-request bookkeeping).
   closed loop — N client threads, each keeping a window of W requests
                 outstanding (submit W, collect, repeat).  Saturates the
@@ -42,10 +42,11 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro import pipeline
 from repro.core import bnn, ensemble, mapping
+from repro.deploy import deploy
 from repro.serve.picbnn import BatchingPolicy, PicBnnServer
 from repro.serve.scheduler import latency_summary
+from repro.spec import VOTES
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
@@ -76,33 +77,34 @@ def measure_raw(pipe, batch: int, duration_s: float, seed=1) -> dict:
     bound is measured over the same window length as the load phases."""
     rng = np.random.default_rng(seed)
     x = rng.choice([-1.0, 1.0], (batch, PAPER_SIZES[0])).astype(np.float32)
-    jax.block_until_ready(pipe.votes(x))  # compile
+    jax.block_until_ready(pipe.run(x, VOTES))  # compile
     t0 = time.perf_counter()
     n = 0
     while time.perf_counter() - t0 < duration_s:
-        jax.block_until_ready(pipe.votes(x))
+        jax.block_until_ready(pipe.run(x, VOTES))
         n += 1
     dt = (time.perf_counter() - t0) / n
     return {"batch": batch, "s_per_batch": dt, "inf_per_s": batch / dt,
             "duration_s": duration_s}
 
 
-def _fresh_server(pipe, policy: BatchingPolicy) -> PicBnnServer:
-    """New engine around the SAME pipeline object — jit caches persist in
-    the pipeline closures, so per-phase servers add no recompiles."""
+def _fresh_server(dep, policy: BatchingPolicy) -> PicBnnServer:
+    """New engine around the SAME Deployment — its cached pipeline's jit
+    programs persist, so per-phase servers add no recompiles (and
+    layer_sizes for the Table-II comparison derive from the artifact)."""
     srv = PicBnnServer(policy)
-    srv.register("mnist", pipe, layer_sizes=PAPER_SIZES)
+    srv.register("mnist", dep)
     return srv
 
 
-def closed_loop(pipe, policy: BatchingPolicy, n_clients: int, window: int,
+def closed_loop(dep, policy: BatchingPolicy, n_clients: int, window: int,
                 duration_s: float, images: np.ndarray,
                 depth: int = 2) -> dict:
     """Each client keeps `depth` windows of `window` requests in flight
     (submit ahead, then wait the oldest) — saturation means a backlog
     exists, and the submit-ahead keeps the dispatch thread fed so no
     stage of the pipeline ever sleeps waiting for a client wake-up."""
-    srv = _fresh_server(pipe, policy)
+    srv = _fresh_server(dep, policy)
     srv.warmup()
     stop = time.perf_counter() + duration_s
 
@@ -142,10 +144,10 @@ def closed_loop(pipe, policy: BatchingPolicy, n_clients: int, window: int,
     }
 
 
-def open_loop(pipe, policy: BatchingPolicy, offered_inf_per_s: float,
+def open_loop(dep, policy: BatchingPolicy, offered_inf_per_s: float,
               duration_s: float, images: np.ndarray) -> dict:
     """Paced submission at a fixed offered rate (1 ms-tick bursts)."""
-    srv = _fresh_server(pipe, policy)
+    srv = _fresh_server(dep, policy)
     srv.warmup()
     n_img = len(images)
     submitted = 0
@@ -207,8 +209,11 @@ def _main(fast: bool, json_path: str | None, write_json: bool):
                             max_inflight=4)
 
     folded = random_folded(PAPER_SIZES)
-    pipe = pipeline.compile_pipeline(folded, ensemble.EnsembleConfig(),
-                                     max_bucket=max_batch)
+    # the serving deployment artifact: the server registers the SAME
+    # object a checkpoint directory would reconstruct (deploy.Deployment)
+    deployment = deploy(folded, ens_cfg=ensemble.EnsembleConfig(),
+                        max_bucket=max_batch)
+    pipe = deployment.pipeline()
     rng = np.random.default_rng(7)
     images = rng.choice([-1.0, 1.0], (1024, PAPER_SIZES[0])).astype(
         np.float32
@@ -237,8 +242,8 @@ def _main(fast: bool, json_path: str | None, write_json: bool):
                                                (1, max_batch, 3),
                                                (2, max_batch, 3)]
     for n_clients, window, depth in points:
-        r = closed_loop(pipe, policy, n_clients, window, duration, images,
-                        depth=depth)
+        r = closed_loop(deployment, policy, n_clients, window, duration,
+                        images, depth=depth)
         raw_trials.append(measure_raw(pipe, max_batch, duration))
         closed.append(r)
     raw = sorted(raw_trials,
@@ -258,7 +263,7 @@ def _main(fast: bool, json_path: str | None, write_json: bool):
     opened = []
     for frac in fracs:
         rate = frac * sat["inf_per_s"]
-        r = open_loop(pipe, policy, rate, duration, images)
+        r = open_loop(deployment, policy, rate, duration, images)
         r["offered_frac_of_saturation"] = frac
         opened.append(r)
         print(f"open,{frac:.1f}sat,{r['achieved_inf_per_s']:.0f},"

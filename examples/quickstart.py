@@ -12,15 +12,17 @@ Run:  PYTHONPATH=src python examples/quickstart.py [--fast]
 """
 
 import argparse
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro import pipeline
 from repro.core import bnn, ensemble, mapping
 from repro.core.device_model import SILICON, knob_schedule
 from repro.data.synthetic import MNIST_LIKE, binarize_images, make_dataset
+from repro.deploy import Deployment, deploy
+from repro.spec import InferenceSpec
 
 
 def main():
@@ -64,20 +66,27 @@ def main():
           f"(V_ref,V_eval,V_st)={knobs[0].round(3).tolist()} -> HD "
           f"{achieved[0]:.1f}")
 
-    print("=== 5. Algorithm 1 inference ===")
-    # noiseless deployment: the fused packed-domain pipeline — all layers
-    # + the 33-threshold vote in one compiled program, activations packed
-    pipe = pipeline.compile_pipeline(folded, ecfg)
+    print("=== 5. Algorithm 1 inference (deployment + InferenceSpec) ===")
+    # deployment artifact: folded layers + ensemble config bundled; the
+    # fused packed-domain pipeline (all layers + the 33-threshold vote in
+    # one compiled program) compiles lazily per request spec
+    dep = deploy(folded, config=cfg, ens_cfg=ecfg)
+    pipe = dep.pipeline()
     t0 = time.time()
-    pred = pipe.predict(jnp.asarray(vxb))
+    pred = dep.run(jnp.asarray(vxb), InferenceSpec(reduction="argmax"))
     acc = float((pred == jnp.asarray(vy)).mean())
     dt = time.time() - t0
     print(f"  end-to-end-binary top1 [fused pipeline/{pipe.impl}]: "
           f"{acc:.4f}  ({len(vy) / dt / 1e3:.1f}K inf/s incl. compile)")
-    # silicon PVT noise: the SAME fused pipeline, device physics threaded
-    # through — the paper's LLN claim: 33 noisy passes ~ noiseless accuracy
-    pipe_si = pipeline.compile_pipeline(folded, ecfg, noise=SILICON)
-    pred_si = pipe_si.predict(jnp.asarray(vxb), key=jax.random.PRNGKey(7))
+    # silicon PVT noise: the SAME fused program family, device physics
+    # threaded through — a spec field selects the draw, the LLN claim is
+    # 33 noisy passes ~ noiseless accuracy
+    dep_si = deploy(folded, config=cfg, ens_cfg=ecfg, noise=SILICON)
+    pred_si = dep_si.run(
+        jnp.asarray(vxb),
+        InferenceSpec(noise="batch", reduction="argmax"),
+        key=jax.random.PRNGKey(7),
+    )
     acc_si = float((pred_si == jnp.asarray(vy)).mean())
     print(f"  end-to-end-binary top1 [silicon PVT noise, fused]: "
           f"{acc_si:.4f}  (delta vs noiseless {100 * (acc - acc_si):+.2f} "
@@ -93,39 +102,45 @@ def main():
           f"(paper: 560K); {1.0/cost.energy_j/1e6:.0f}M inf/s/W "
           f"(paper: 703M)")
 
-    print("=== 7. serving: async micro-batched classification ===")
-    # both pipelines behind one submit() API; silicon requests carry a
-    # per-request PRNG key, so served draws are reproducible bit-for-bit
+    print("=== 7. serving: register deployments, even from disk ===")
+    # both deployments behind one submit() API; silicon requests carry a
+    # per-request PRNG key, so served draws are reproducible bit-for-bit.
+    # The noiseless model round-trips through Deployment.save/load — the
+    # path a production server takes when registering models from a
+    # checkpoint directory.
     from repro.serve.picbnn import BatchingPolicy, PicBnnServer
 
     srv = PicBnnServer(BatchingPolicy(max_batch=256, max_wait_us=500.0))
-    srv.register("mnist", pipe, layer_sizes=cfg.layer_sizes)
-    srv.register("mnist-si", pipe_si, layer_sizes=cfg.layer_sizes)
-    srv.warmup()  # precompile every batch bucket: no first-request spike
-    with srv:
-        handles = [srv.submit("mnist", vxb[i]) for i in range(512)]
-        h_si = srv.submit("mnist-si", vxb[0],
-                          key=jax.random.PRNGKey(7))
-        served = [h.wait() for h in handles]
-        print(f"  served pred[0]={served[0]} (direct: {int(pred[0])}), "
-              f"silicon pred[0]={h_si.wait()}")
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        dep.save(ckpt_dir)  # manifest + bit-packed weights
+        srv.register("mnist", Deployment.load(ckpt_dir))
+        srv.register("mnist-si", dep_si)
+        srv.warmup()  # precompile every bucket: no first-request spike
+        with srv:
+            handles = [srv.submit("mnist", vxb[i]) for i in range(512)]
+            h_si = srv.submit("mnist-si", vxb[0],
+                              key=jax.random.PRNGKey(7))
+            served = [h.wait() for h in handles]
+            print(f"  served pred[0]={served[0]} (direct: {int(pred[0])}"
+                  f"), silicon pred[0]={h_si.wait()}")
     print("  " + srv.stats().summary().replace("\n", "\n  "))
 
     print("=== 8. end-to-end-binary CNN workload ===")
     # the input layer is binary too: raw [0,1] pixels pass through a
     # thermometer encoding INSIDE the compiled program (the paper's
     # end-to-end claim, conv edition — see DESIGN.md §10)
-    from repro.configs.paper_cnn import MNIST_CNN, build_cnn_pipeline
+    from repro.configs.paper_cnn import MNIST_CNN, deploy_cnn
     from repro.core import convnet
 
     cnn_epochs = 2 if args.fast else 6
     cnn_params = convnet.train_cnn(
         jax.random.PRNGKey(1), MNIST_CNN, tx, ty, epochs=cnn_epochs
     )
-    cnn_pipe = build_cnn_pipeline(MNIST_CNN, convnet.fold_cnn(cnn_params,
-                                                             MNIST_CNN))
+    # trained params + config in, deployment out (the fold runs inside)
+    cnn_dep = deploy_cnn(MNIST_CNN, cnn_params)
     acc_sw = convnet.eval_cnn_accuracy(cnn_params, MNIST_CNN, vx, vy)["top1"]
-    acc_cnn = float((cnn_pipe.predict(jnp.asarray(vx))
+    acc_cnn = float((cnn_dep.run(jnp.asarray(vx),
+                                 InferenceSpec(reduction="argmax"))
                      == jnp.asarray(vy)).mean())
     si = convnet.cnn_inference_cost(MNIST_CNN).inferences_per_s
     print(f"  conv(3x3x32,s2) x2 -> FC128 -> 10-row CAM head, "
@@ -133,12 +148,13 @@ def main():
     print(f"  software top1 {acc_sw:.4f} vs deployed Algorithm-1 "
           f"{acc_cnn:.4f}; silicon equivalent {si/1e3:.1f}K inf/s")
     cnn_srv = PicBnnServer(BatchingPolicy(max_batch=128, max_wait_us=500.0))
-    cnn_srv.register("cnn-mnist", cnn_pipe,
+    cnn_srv.register("cnn-mnist", cnn_dep,
                      silicon_cost=convnet.cnn_inference_cost(MNIST_CNN))
     with cnn_srv:
         h = cnn_srv.submit("cnn-mnist", vx[0])  # raw [0,1] pixels
-        print(f"  served CNN pred[0]={h.wait()} "
-              f"(direct: {int(cnn_pipe.predict(vx[:1])[0])})")
+        direct = int(cnn_dep.run(vx[:1],
+                                 InferenceSpec(reduction="argmax"))[0])
+        print(f"  served CNN pred[0]={h.wait()} (direct: {direct})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,95 @@
+"""Deprecation lint (wired into scripts/smoke.sh).
+
+The ISSUE-5 API redesign collapsed the eight-way `CompiledPipeline`
+entry-point family into `run(x, InferenceSpec(...))`; the old methods
+survive ONLY as deprecated shims inside `src/repro/pipeline.py` (one
+release).  This gate keeps them from creeping back: it fails if any
+non-shim code under `src/` or `benchmarks/` (or `examples/`) still
+calls a legacy entry method.
+
+Mechanics: every ``*.py`` file is AST-scanned for *attribute calls*
+named like a legacy entry (``something.votes(...)``, ``x.cum_votes(...)``
+...).  Module-level function calls (e.g. ``ensemble.predict`` does not
+exist; ``predict(...)`` as a bare name) are not flagged — the lint
+targets the pipeline method surface.  The shim module itself and the
+test suite (which intentionally exercises the shims as the
+pre-redesign bit-exactness oracle) are exempt.
+
+Run:  python scripts/check_deprecated.py
+Exit status 0 on success; prints every violation otherwise.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+#: the retired entry-point family (see repro.spec.legacy_entry_spec)
+LEGACY_METHODS = frozenset({
+    "votes", "votes_packed", "votes_mc", "votes_each", "votes_mc_each",
+    "votes_mc_each_sum", "cum_votes", "predict", "predict_each",
+})
+
+#: directories held to the no-legacy-calls bar
+SCAN_DIRS = ("src", "benchmarks", "examples")
+
+#: the one place the shims are allowed to live
+EXEMPT = {Path("src/repro/pipeline.py")}
+
+#: attribute calls that are NOT pipeline entry points (other objects
+#: legitimately expose a same-named method)
+ALLOWED_RECEIVERS = {
+    # e.g. sklearn-style `model.predict(...)` on an LM engine would go
+    # here; none exist today — extend deliberately, with a comment.
+}
+
+
+def _violations(path: Path) -> list[str]:
+    """Legacy pipeline-method attribute calls in one file."""
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:  # a broken file is its own violation
+        return [f"{path}: syntax error: {e}"]
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute) and fn.attr in LEGACY_METHODS):
+            continue
+        recv = ast.unparse(fn.value) if hasattr(ast, "unparse") else "?"
+        if (recv, fn.attr) in ALLOWED_RECEIVERS:
+            continue
+        out.append(
+            f"{path.relative_to(REPO_ROOT)}:{node.lineno}: legacy entry "
+            f"`{recv}.{fn.attr}(...)` — use run(x, InferenceSpec(...)); "
+            "see repro.spec.legacy_entry_spec / README migration table"
+        )
+    return out
+
+
+def main() -> int:
+    """Scan SCAN_DIRS; print violations; return a process exit status."""
+    failures: list[str] = []
+    n_files = 0
+    for d in SCAN_DIRS:
+        for path in sorted((REPO_ROOT / d).rglob("*.py")):
+            if path.relative_to(REPO_ROOT) in EXEMPT:
+                continue
+            n_files += 1
+            failures += _violations(path)
+    if failures:
+        print(f"check_deprecated: {len(failures)} legacy entry call(s)")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"check_deprecated OK: {n_files} files scanned, no legacy "
+          "pipeline entry calls outside the shims")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,6 +36,8 @@ REPO_ROOT = Path(__file__).resolve().parents[1]
 #: the public API surface held to the docstring bar
 API_MODULES = [
     "repro.pipeline",
+    "repro.spec",
+    "repro.deploy",
     "repro.serve.picbnn",
     "repro.serve.scheduler",
     "repro.core.physics",

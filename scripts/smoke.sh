@@ -12,6 +12,7 @@ mkdir -p "$(dirname "$OUT")"
 
 python -m pytest -q
 python scripts/check_docs.py
+python scripts/check_deprecated.py
 python -m benchmarks.run --fast --only kern,table2,conv,noise,serve --json "$OUT"
 
 echo "smoke OK -> $OUT"

@@ -53,26 +53,29 @@ CNN_ENSEMBLE = EnsembleConfig(
 )
 
 
+def deploy_cnn(cfg: CNNConfig, model, *, noise=None, **kw):
+    """Build the `deploy.Deployment` artifact for an end-to-end CNN.
+
+    Thin wrapper over `deploy.deploy` that threads the config's image
+    geometry, binary input encoding, and bias cells (the conv-aware bq
+    default — 64, DESIGN.md §10 — comes from compile_pipeline itself).
+    `model` is `convnet.fold_cnn` (trained), a trained params dict
+    (folded here), or `convnet.random_folded_cnn` (weight-agnostic
+    benchmarks/tests) output.  `.pipeline()` compiles lazily;
+    `.save(dir)` persists for `PicBnnServer.register`.
+    """
+    from repro.deploy import deploy
+
+    return deploy(model, config=cfg, noise=noise, **kw)
+
+
 def build_cnn_pipeline(cfg: CNNConfig, folded, *, impl=None, bq=None,
                        noise=None, **kw):
     """Compile a folded CNN into the fused end-to-end pipeline.
 
-    Thin wrapper over `pipeline.compile_pipeline` that threads the
-    config's image geometry and binary input encoding (the conv-aware
-    bq default — 64, DESIGN.md §10 — comes from compile_pipeline
-    itself).  `folded` is `convnet.fold_cnn` (trained) or
-    `convnet.random_folded_cnn` (weight-agnostic benchmarks/tests)
-    output.
+    `deploy_cnn(...).pipeline()` in one call — kept as the historical
+    one-call deployment path used by benchmarks and tests.
     """
-    from repro import pipeline
-
-    return pipeline.compile_pipeline(
-        folded,
-        EnsembleConfig(bias_cells=cfg.bias_cells),
-        impl=impl,
-        bq=bq,
-        image_side=cfg.side,
-        image_encoding=cfg.encoding,
-        noise=noise,
-        **kw,
-    )
+    opts = {k: v for k, v in dict(impl=impl, bq=bq, **kw).items()
+            if v is not None}
+    return deploy_cnn(cfg, folded, noise=noise, **opts).pipeline()

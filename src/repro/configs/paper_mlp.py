@@ -3,7 +3,9 @@
   MNIST MLP        : 784 -> 128 -> 10
   Hand Gesture MLP : 4096 -> 128 -> 20
 
-plus the Algorithm 1 ensemble settings (33 thresholds, {0, 2, ..., 64})."""
+plus the Algorithm 1 ensemble settings (33 thresholds, {0, 2, ..., 64})
+and `deploy_mlp`, the one-call deployment builder (train -> fold ->
+persistable `deploy.Deployment`)."""
 
 from repro.core.bnn import MLPConfig
 from repro.core.ensemble import EnsembleConfig, PAPER_THRESHOLDS
@@ -14,6 +16,21 @@ HG_MLP = MLPConfig(layer_sizes=(4096, 128, 20), bias_cells=64)
 PAPER_ENSEMBLE = EnsembleConfig(
     thresholds=PAPER_THRESHOLDS, bias_cells=64, mode="fused"
 )
+
+
+def deploy_mlp(cfg: MLPConfig, model, *, noise=None, **kw):
+    """Build the `deploy.Deployment` artifact for a paper MLP.
+
+    Thin wrapper over `deploy.deploy` that threads the config (bias
+    cells -> ensemble config).  `model` is `bnn.fold` output or a
+    trained params dict (folded here); `noise` and any
+    `deploy.COMPILE_OPTIONS` pass through.  `.pipeline()` compiles the
+    fused classifier lazily; `.save(dir)` persists it for
+    `PicBnnServer.register`.
+    """
+    from repro.deploy import deploy
+
+    return deploy(model, config=cfg, noise=noise, **kw)
 
 # Baseline software accuracies reported by the paper (Sec. V-A)
 PAPER_MNIST_TOP1 = 0.952

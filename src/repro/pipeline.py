@@ -2,11 +2,21 @@
 
 `compile_pipeline(folded, ens_cfg)` turns a folded binary MLP (list of
 `bnn.FoldedLayer`) plus an Algorithm-1 ensemble config into a jitted
-batch classifier:
+batch classifier driven by a declarative request spec
+(`repro.spec.InferenceSpec`):
 
     pipe = compile_pipeline(folded, EnsembleConfig())
-    votes = pipe.votes(x_pm1)     # [B, n_classes] int32 vote counts
-    pred  = pipe.predict(x_pm1)   # [B] int32 argmax classes
+    votes = pipe.run(x_pm1, InferenceSpec())              # [B, C] int32
+    pred  = pipe.run(x_pm1, InferenceSpec(reduction="argmax"))  # [B]
+
+`run(x, spec, key=..., keys=...)` is the ONE entry point: it compiles
+and caches exactly one fused program per distinct spec, and centralizes
+the batch bucketing, pad/trim, and PRNG-key shape logic that the legacy
+eight-method family (`votes`, `votes_each`, `votes_mc`, `votes_mc_each`,
+`votes_mc_each_sum`, `cum_votes`, `predict`, `predict_each`) used to
+copy-paste.  Those methods remain as thin deprecated shims over `run()`
+for one release — bit-exact equal by construction (each shim just names
+a spec) and proven so by the pre-redesign oracle tests.
 
 Semantics are bit-exact equal to the digital oracle
 (`bnn.folded_forward_exact` hidden layers + `ensemble.votes_fused` head);
@@ -18,13 +28,24 @@ fused program — per-pass effective thresholds are sampled as [P, B, C]
 float arrays (sigma_hd per row; sigma_vref / sigma_tjitter pass-global
 through the Table-I knob schedule; temp_drift_hd systematic) and only the
 head compare changes, so the HD-once/compare-33x amortization survives
-noise.  `votes(x, key=...)` draws one silicon realization;
-`votes_mc(x, key, n_samples)` vmaps the draw for Monte-Carlo evaluation
-with the Hamming distances computed ONCE across all samples;
-`cum_votes(x, key)` exposes the per-pass cumulative votes that noisy
-Fig.-5-style truncated sweeps need (`ensemble.sweep_from_votes` is
-noiseless-only — see its docstring).  With `noise=NOISELESS` every noisy
-entry point is bit-identical to the noiseless oracle (tested).
+noise.  The spec's `noise` axis selects the draw shape:
+
+  "batch"       — one realization for the whole batch (`key=`); row
+                  realizations depend on batch composition and bucket
+                  padding (a measurement-style draw).
+  "per_request" — one batch_shape=() draw per row from `keys[i]`;
+                  results are invariant to how a serving loop coalesces
+                  requests (the serve determinism contract).
+
+`mc_samples=S` vmaps S independent threshold realizations over ONE
+Hamming-distance computation; `cumulative=True` exposes the per-pass
+cumulative votes [P, B, C] that noisy Fig.-5-style truncated sweeps need
+(`ensemble.sweep_from_votes` is noiseless-only — see its docstring).
+`InferenceSpec(noise="off", cumulative=True)` is the exact noiseless
+staircase, valid on ANY pipeline — the explicit form of what `cum_votes`
+used to do by silently substituting `PRNGKey(0)`.  With
+`noise=NOISELESS` every noisy spec is bit-identical to the noiseless
+oracle (tested).
 
 Two fused implementations, selected by `impl` (default: by backend):
 
@@ -40,9 +61,10 @@ Two fused implementations, selected by `impl` (default: by backend):
            benchmarks/e2e_throughput.py).  The noisy path broadcasts the
            sampled [P, B, C] thresholds against the one HD computation.
 
-`votes_mc` / `cum_votes` always use the XLA-twin math (per-pass outputs
-do not fit the kernel's single [B, C] result block); the twins are
-bit-exact equal so this is a pure scheduling choice.
+Monte-Carlo, cumulative, and per-request specs always use the XLA-twin
+math (per-pass/per-sample outputs do not fit the kernel's single [B, C]
+result block); the twins are bit-exact equal so this is a pure
+scheduling choice.
 
 Convolutional graphs: `folded` may start with a prefix of
 `convnet.FoldedConvLayer` (a deployed end-to-end-binary CNN, e.g.
@@ -51,14 +73,17 @@ Convolutional graphs: `folded` may start with a prefix of
 default) and the channel packing run inside the jitted `_pack_fn`, the
 conv stack executes in the packed domain (`kernels/fused_conv.py` on the
 pallas path, the same shared math as one XLA program otherwise), and the
-flatten feeds the FC stage — so every entry point below (votes, silicon
-votes(key=), votes_mc, cum_votes, the votes_each serving family) works
-identically for conv and MLP deployments.  Bit-exactness bar: the
-unpacked oracle `kernels.ref.conv_votes_ref` (tests/test_conv.py).
+flatten feeds the FC stage — so every spec works identically for conv
+and MLP deployments.  Bit-exactness bar: the unpacked oracle
+`kernels.ref.conv_votes_ref` (tests/test_conv.py).
 
 Batch-size bucketing: inputs are zero-padded up to the next bucket
 (powers of two, floor `min_bucket`) so a serving loop with ragged batch
 sizes compiles O(log B) program variants instead of one per size.
+
+Persistable deployments (`repro.deploy.Deployment`) bundle the folded
+layers + encoding + configs this function takes, and rebuild the same
+pipeline from disk — see deploy.py.
 """
 
 from __future__ import annotations
@@ -66,6 +91,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -79,6 +105,7 @@ from repro.core.device_model import NoiseModel
 from repro.core.ensemble import CAMEnsembleHead, EnsembleConfig, build_head
 from repro.core.physics import SearchPhysics
 from repro.kernels import fused_conv, fused_mlp
+from repro.spec import InferenceSpec, legacy_entry_spec
 
 
 def next_bucket(n: int, min_bucket: int = 64,
@@ -140,9 +167,34 @@ def _head_hd_xla(x_packed, layer_ws, layer_cs, layer_n_bits, head_rows,
     return binarize.hamming_packed(q[:, None, :], head_rows)
 
 
+_LEGACY_WARNED: set = set()
+
+
+def _warn_legacy(name: str) -> None:
+    """One DeprecationWarning per legacy entry point per process."""
+    if name in _LEGACY_WARNED:
+        return
+    _LEGACY_WARNED.add(name)
+    warnings.warn(
+        f"CompiledPipeline.{name}() is a deprecated shim over "
+        f"run(x, InferenceSpec(...)) — see repro.spec.legacy_entry_spec "
+        "and the README migration table; it will be removed next release",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 @dataclasses.dataclass
 class CompiledPipeline:
-    """A jitted end-to-end batch classifier for one deployed BNN."""
+    """A jitted end-to-end batch classifier for one deployed BNN.
+
+    The execution surface is `run(x, spec)` / `run_packed(x_packed,
+    spec)`: one fused XLA program is compiled and cached per distinct
+    `InferenceSpec` (`program(spec)` is the cache), and all bucketing /
+    padding / result trimming / PRNG-key validation lives in `run_packed`
+    — once, for every spec.  The legacy method family survives as
+    deprecated shims that name their spec.
+    """
 
     head: CAMEnsembleHead
     n_in: int
@@ -151,16 +203,100 @@ class CompiledPipeline:
     min_bucket: int
     head_only: bool  # no hidden layers: input feeds the CAM head directly
     physics: Optional[SearchPhysics]  # None <=> compiled without noise=
-    _votes_packed: Callable  # [Bp, Kw0] uint32 -> [Bp, C] int32 (jitted)
-    _votes_noisy_packed: Optional[Callable] = None  # (x, key) -> [Bp, C]
-    _votes_mc_packed: Optional[Callable] = None  # (x, key, S) -> [S, Bp, C]
-    _cum_votes_packed: Optional[Callable] = None  # (x, key) -> [P, Bp, C]
-    _votes_each_packed: Optional[Callable] = None  # (x, keys[B,2]) -> [Bp, C]
-    _votes_mc_each_packed: Optional[Callable] = None  # (x, keys, S)
-    _votes_mc_each_sum_packed: Optional[Callable] = None  # -> [Bp, C]
-    _pack_fn: Optional[Callable] = None  # jitted ±1 [B, n_in] -> packed
+    _program_factory: Callable  # InferenceSpec -> jitted program
+    _pack_fn: Callable  # jitted ±1 [B, n_in] -> packed
     max_bucket: Optional[int] = None  # serving cap on the bucket grid
+    _programs: dict = dataclasses.field(default_factory=dict, repr=False)
 
+    # ------------------------------------------------------------------
+    # the generic compiled-request API
+    # ------------------------------------------------------------------
+    def program(self, spec: InferenceSpec) -> Callable:
+        """The compiled program for `spec` (built and cached on first use).
+
+        Signature depends on the spec's noise axis: `f(x_packed)` for
+        "off", `f(x_packed, key)` for "batch", `f(x_packed, keys)` for
+        "per_request" — `run_packed` dispatches accordingly.  Callers
+        normally never touch this; it exists so warmup and tests can
+        assert cache identity.
+        """
+        prog = self._programs.get(spec)
+        if prog is None:
+            if spec.needs_physics and self.physics is None:
+                raise ValueError(
+                    f"{spec.describe()} needs a silicon-mode pipeline: "
+                    "recompile with compile_pipeline(..., noise=<NoiseModel>)"
+                )
+            prog = self._program_factory(spec)
+            self._programs[spec] = prog
+        return prog
+
+    def run(self, x: jax.Array, spec: InferenceSpec, *,
+            key: Optional[jax.Array] = None,
+            keys: Optional[jax.Array] = None) -> jax.Array:
+        """Execute one declarative inference request on a raw batch.
+
+        x    : [B, n_in] — ±1 activations for MLP pipelines, RAW [0,1]
+               pixels for conv pipelines (the binary input encoding and
+               channel packing run inside the jitted pack step).
+        spec : what to run (`repro.spec.InferenceSpec`).
+        key  : batch-level PRNG key — required iff spec.noise=="batch".
+        keys : per-request raw uint32 [B, 2] PRNG keys — required iff
+               spec.noise=="per_request".
+
+        Returns int32 votes/predictions shaped per the spec (see
+        repro/spec.py's shape table), trimmed to the logical batch.
+        """
+        return self.run_packed(self._pack_input(x), spec, key=key, keys=keys)
+
+    def run_packed(self, x_packed: jax.Array, spec: InferenceSpec, *,
+                   key: Optional[jax.Array] = None,
+                   keys: Optional[jax.Array] = None) -> jax.Array:
+        """`run` for an already-packed input batch [B, Kw0].
+
+        Conv pipelines: Kw0 = side*side*Cw0, the row-flattened channel-
+        packed encoded image the jitted pack step emits (`_pack_input`).
+        This is the ONE place bucket padding, key-shape validation, and
+        result trimming happen, for every spec.
+        """
+        prog = self.program(spec)  # physics capability check happens here
+        x_packed, b = self._bucketed(x_packed)
+        if spec.needs_keys:
+            if key is not None:
+                raise ValueError(
+                    f"{spec.describe()} takes per-request keys=, not a "
+                    "batch-level key="
+                )
+            if keys is None:
+                raise ValueError(
+                    f"{spec.describe()} needs per-request keys= "
+                    "([B, 2] raw uint32 PRNG keys)"
+                )
+            out = prog(x_packed, self._each_keys(keys, b, x_packed.shape[0]))
+        elif spec.needs_key:
+            if keys is not None:
+                raise ValueError(
+                    f"{spec.describe()} takes one batch-level key=, not "
+                    "per-request keys="
+                )
+            if key is None:
+                raise ValueError(
+                    f"{spec.describe()} needs an explicit key= (each call "
+                    "is one silicon realization)"
+                )
+            out = prog(x_packed, key)
+        else:
+            if key is not None or keys is not None:
+                raise ValueError(
+                    f'{spec.describe()} is deterministic (noise="off"): '
+                    "it accepts neither key= nor keys="
+                )
+            out = prog(x_packed)
+        return self._trim(out, b, spec.batch_axis)
+
+    # ------------------------------------------------------------------
+    # shared glue (bucketing / packing / trimming / key shapes)
+    # ------------------------------------------------------------------
     def _pack_input(self, x_pm1: jax.Array) -> jax.Array:
         # one jitted dispatch: the eager op-by-op pack costs ~5x the whole
         # fused vote program in host dispatch overhead (serving hot path)
@@ -173,143 +309,13 @@ class CompiledPipeline:
             x_packed = jnp.pad(x_packed, ((0, bp - b), (0, 0)))
         return x_packed, b
 
-    def buckets_for(self, max_batch: int) -> tuple[int, ...]:
-        """The bucket grid batches 1..max_batch dispatch into."""
-        return bucket_grid(max_batch, self.min_bucket)
-
-    #: every warmable entry point; "votes" is the noiseless path, the
-    #: rest need a silicon-mode pipeline ("votes_mc*" also mc_samples)
-    WARMUP_ENTRIES = ("votes", "votes_noisy", "votes_each", "votes_mc",
-                      "votes_mc_each", "votes_mc_each_sum")
-
-    def warmup(self, max_batch: int, *, key: Optional[jax.Array] = None,
-               mc_samples: Optional[int] = None, device=None,
-               entries: Optional[Sequence[str]] = None) -> dict[int, float]:
-        """Precompile every bucket a batch <= max_batch can land on.
-
-        Runs one dummy batch per bucket through the selected compiled
-        entry points and blocks until ready, so first-request compile
-        latency never shows up in served percentiles.
-
-        entries : subset of WARMUP_ENTRIES; default warms everything the
-            pipeline supports (noiseless votes; plus votes(key=) /
-            votes_each, and the votes_mc* family when `mc_samples` is
-            given, on a silicon-mode pipeline).  A serving loop passes
-            exactly its dispatch path — each entry is a separate XLA
-            compile per bucket, and startup time is entries x buckets x
-            devices.
-        device  : commits the dummy operands — a device for round-robin
-            fan-out, or a `jax.sharding.Sharding` for SPMD fan-out (jit
-            caches key on input sharding, so warming with a different
-            placement than dispatch would never hit).  Scalar keys are
-            replicated when a sharding is given (a [2] key cannot take a
-            batch-axis shard).
-
-        Returns {bucket: seconds} — dominated by compile time on first
-        call, ~free when already cached.
-        """
-        if entries is None:
-            entries = ("votes",) if self.physics is None else (
-                self.WARMUP_ENTRIES if mc_samples
-                else ("votes", "votes_noisy", "votes_each")
-            )
-        unknown = set(entries) - set(self.WARMUP_ENTRIES)
-        if unknown:
-            raise ValueError(f"unknown warmup entries {sorted(unknown)}")
-        if any(e != "votes" for e in entries):
-            self._require_physics("warmup of silicon entries")
-        if any(e.startswith("votes_mc") for e in entries) and not mc_samples:
-            raise ValueError("votes_mc* warmup entries need mc_samples=")
-
-        replicated = None
-        if isinstance(device, jax.sharding.NamedSharding):
-            from jax.sharding import PartitionSpec
-
-            replicated = jax.sharding.NamedSharding(device.mesh,
-                                                    PartitionSpec())
-        times: dict[int, float] = {}
-        for b in self.buckets_for(max_batch):
-            x = jnp.ones((b, self.n_in), jnp.float32)
-            k = key if key is not None else jax.random.PRNGKey(0)
-            keys = jax.random.split(k, b)
-            if device is not None:
-                x = jax.device_put(x, device)
-                k = jax.device_put(k, replicated or device)
-                keys = jax.device_put(keys, device)  # batch-sharded like x
-            t0 = time.perf_counter()
-            if "votes" in entries:
-                jax.block_until_ready(self.votes(x))
-            if "votes_noisy" in entries:
-                jax.block_until_ready(self.votes(x, k))
-            if "votes_each" in entries:
-                jax.block_until_ready(self.votes_each(x, keys))
-            if "votes_mc" in entries:
-                jax.block_until_ready(self.votes_mc(x, k, mc_samples))
-            if "votes_mc_each" in entries:
-                jax.block_until_ready(
-                    self.votes_mc_each(x, keys, mc_samples)
-                )
-            if "votes_mc_each_sum" in entries:
-                jax.block_until_ready(
-                    self.votes_mc_each_sum(x, keys, mc_samples)
-                )
-            times[b] = time.perf_counter() - t0
-        return times
-
-    def _require_physics(self, what: str) -> SearchPhysics:
-        if self.physics is None:
-            raise ValueError(
-                f"{what} needs a silicon-mode pipeline: recompile with "
-                "compile_pipeline(..., noise=<NoiseModel>)"
-            )
-        return self.physics
-
-    def votes(self, x_pm1: jax.Array, key: Optional[jax.Array] = None):
-        """Vote counts for an input batch [B, n_in] -> [B, C] int32.
-
-        Input domain: ±1 activations for MLP pipelines; RAW [0,1] pixels
-        for conv pipelines (n_in = image_side**2 — the binary input
-        encoding and channel packing run inside the jitted pack step).
-
-        With `key` (requires a `noise=`-compiled pipeline) the votes are
-        one silicon-noise realization; with the NOISELESS model this path
-        is bit-identical to the noiseless one.
-        """
-        return self.votes_packed(self._pack_input(x_pm1), key)
-
     @staticmethod
-    def _trim(out: jax.Array, b: int) -> jax.Array:
+    def _trim(out: jax.Array, b: int, axis: int) -> jax.Array:
         # slicing is an eager XLA op per call — skip it when the batch
         # already fills its bucket (the serving hot path by construction)
-        return out if out.shape[0] == b else out[:b]
-
-    def votes_packed(self, x_packed: jax.Array,
-                     key: Optional[jax.Array] = None) -> jax.Array:
-        """Vote counts for an already-packed input batch [B, Kw0].
-
-        Conv pipelines: Kw0 = side*side*Cw0, the row-flattened channel-
-        packed encoded image the jitted pack step emits (`_pack_input`).
-        """
-        x_packed, b = self._bucketed(x_packed)
-        if key is None:
-            return self._trim(self._votes_packed(x_packed), b)
-        self._require_physics("votes(key=...)")
-        return self._trim(self._votes_noisy_packed(x_packed, key), b)
-
-    def votes_mc(self, x_pm1: jax.Array, key: jax.Array,
-                 n_samples: int) -> jax.Array:
-        """Monte-Carlo silicon-noise votes: [n_samples, B, C] int32.
-
-        One fused program: the packed forward + Hamming distances run
-        ONCE, then `n_samples` independent threshold realizations are
-        drawn (vmapped) and compared in-register — this is what replaces
-        `n_samples` sequential `votes_faithful` sweeps (benchmarks record
-        the speedup in BENCH_noise.json).
-        """
-        self._require_physics("votes_mc")
-        x_packed, b = self._bucketed(self._pack_input(x_pm1))
-        out = self._votes_mc_packed(x_packed, key, int(n_samples))
-        return out if out.shape[1] == b else out[:, :b]
+        if out.shape[axis] == b:
+            return out
+        return out[:b] if axis == 0 else out[:, :b]
 
     def _each_keys(self, keys, b: int, bp: int) -> jax.Array:
         keys = jnp.asarray(keys)
@@ -323,92 +329,248 @@ class CompiledPipeline:
             keys = jnp.pad(keys, ((0, bp - b), (0, 0)))
         return keys
 
-    def votes_each(self, x_pm1: jax.Array, keys: jax.Array) -> jax.Array:
-        """Per-REQUEST silicon realizations: keys [B, 2] -> [B, C] int32.
+    def buckets_for(self, max_batch: int) -> tuple[int, ...]:
+        """The bucket grid batches 1..max_batch dispatch into."""
+        return bucket_grid(max_batch, self.min_bucket)
 
-        Row i's votes are one noise draw from keys[i] with a per-request
-        (`batch_shape=()`) sample — unlike `votes(x, key)`, whose one
-        batch-shaped draw makes each row's realization depend on its
-        position and on the bucket padding.  `votes_each` is therefore
-        invariant to batch composition: serving may coalesce requests
-        into arbitrary micro-batches and still return bit-for-bit the
-        votes a direct single-request call produces (the serving-engine
-        determinism contract; see serve/picbnn.py).  In the NOISELESS
-        limit it equals `votes(x)` exactly.
+    # ------------------------------------------------------------------
+    # spec-driven warmup
+    # ------------------------------------------------------------------
+    #: legacy entry names accepted by warmup(entries=) (deprecated —
+    #: pass specs= instead; see repro.spec.legacy_entry_spec)
+    WARMUP_ENTRIES = ("votes", "votes_noisy", "votes_each", "votes_mc",
+                      "votes_mc_each", "votes_mc_each_sum")
+
+    def default_warmup_specs(
+        self, mc_samples: Optional[int] = None
+    ) -> tuple[InferenceSpec, ...]:
+        """Every spec this pipeline supports out of the box.
+
+        Noiseless pipelines warm the plain vote program; silicon-mode
+        pipelines add the batch-draw and per-request programs, plus the
+        Monte-Carlo family when `mc_samples` is given.  A serving loop
+        should instead pass exactly its dispatch spec(s) — each spec is
+        a separate XLA compile per bucket.
         """
-        self._require_physics("votes_each")
-        x_packed, b = self._bucketed(self._pack_input(x_pm1))
-        keys = self._each_keys(keys, b, x_packed.shape[0])
-        return self._trim(self._votes_each_packed(x_packed, keys), b)
+        if self.physics is None:
+            return (InferenceSpec(),)
+        specs = [
+            InferenceSpec(),
+            InferenceSpec(noise="batch"),
+            InferenceSpec(noise="per_request"),
+        ]
+        if mc_samples:
+            specs += [
+                InferenceSpec(noise="batch", mc_samples=mc_samples),
+                InferenceSpec(noise="per_request", mc_samples=mc_samples),
+                InferenceSpec(noise="per_request", mc_samples=mc_samples,
+                              reduction="sum"),
+            ]
+        return tuple(specs)
+
+    def warmup(self, max_batch: int, *,
+               specs: Optional[Sequence[InferenceSpec]] = None,
+               key: Optional[jax.Array] = None,
+               mc_samples: Optional[int] = None, device=None,
+               entries: Optional[Sequence[str]] = None
+               ) -> dict[tuple[InferenceSpec, int], float]:
+        """Precompile every (spec, bucket) program a serving loop needs.
+
+        Runs one dummy batch per (spec, bucket) pair and blocks until
+        ready, so first-request compile latency never shows up in served
+        percentiles.
+
+        specs   : the request specs to warm; default
+            `default_warmup_specs(mc_samples)`.  A serving loop passes
+            exactly its dispatch spec(s) — startup time is
+            specs x buckets x devices XLA compiles.
+        entries : DEPRECATED legacy entry names (translated through
+            `repro.spec.legacy_entry_spec`); mutually exclusive with
+            specs.
+        device  : commits the dummy operands — a device for round-robin
+            fan-out, or a `jax.sharding.Sharding` for SPMD fan-out (jit
+            caches key on input sharding, so warming with a different
+            placement than dispatch would never hit).  Scalar keys are
+            replicated when a sharding is given (a [2] key cannot take a
+            batch-axis shard).
+
+        Returns {(spec, bucket): seconds} — per-program attribution, so
+        serving startup can report exactly where compile time went;
+        dominated by compile time on first call, ~free when the program
+        cache already holds the (spec, bucket) variant.
+        """
+        if entries is not None:
+            if specs is not None:
+                raise ValueError("pass specs= or legacy entries=, not both")
+            _warn_legacy("warmup(entries=)")
+            unknown = set(entries) - set(self.WARMUP_ENTRIES)
+            if unknown:
+                raise ValueError(f"unknown warmup entries {sorted(unknown)}")
+            specs = tuple(
+                legacy_entry_spec(
+                    e, mc_samples if e.startswith("votes_mc") else None
+                )
+                for e in entries
+            )
+        if specs is None:
+            specs = self.default_warmup_specs(mc_samples)
+        for spec in specs:  # capability check before any compile work
+            if spec.needs_physics and self.physics is None:
+                raise ValueError(
+                    f"warmup of {spec.describe()} needs a silicon-mode "
+                    "pipeline: recompile with compile_pipeline(..., "
+                    "noise=<NoiseModel>)"
+                )
+
+        replicated = None
+        if isinstance(device, jax.sharding.NamedSharding):
+            from jax.sharding import PartitionSpec
+
+            replicated = jax.sharding.NamedSharding(device.mesh,
+                                                    PartitionSpec())
+        times: dict[tuple[InferenceSpec, int], float] = {}
+        for b in self.buckets_for(max_batch):
+            x = jnp.ones((b, self.n_in), jnp.float32)
+            k = key if key is not None else jax.random.PRNGKey(0)
+            ks = jax.random.split(k, b)
+            if device is not None:
+                x = jax.device_put(x, device)
+                k = jax.device_put(k, replicated or device)
+                ks = jax.device_put(ks, device)  # batch-sharded like x
+            for spec in specs:
+                t0 = time.perf_counter()
+                jax.block_until_ready(self.run(
+                    x, spec,
+                    key=k if spec.needs_key else None,
+                    keys=ks if spec.needs_keys else None,
+                ))
+                times[(spec, b)] = time.perf_counter() - t0
+        return times
+
+    # ------------------------------------------------------------------
+    # DEPRECATED legacy entry points — thin shims over run()
+    # ------------------------------------------------------------------
+    def votes(self, x_pm1: jax.Array, key: Optional[jax.Array] = None):
+        """DEPRECATED shim: `run(x, InferenceSpec())`, or with `key` one
+        batch-level silicon draw (`InferenceSpec(noise="batch")`).
+
+        Input domain: ±1 activations for MLP pipelines; RAW [0,1] pixels
+        for conv pipelines (n_in = image_side**2 — the binary input
+        encoding and channel packing run inside the jitted pack step).
+        With the NOISELESS model the keyed path is bit-identical to the
+        noiseless one.
+        """
+        _warn_legacy("votes")
+        if key is None:
+            return self.run(x_pm1, InferenceSpec())
+        return self.run(x_pm1, InferenceSpec(noise="batch"), key=key)
+
+    def votes_packed(self, x_packed: jax.Array,
+                     key: Optional[jax.Array] = None) -> jax.Array:
+        """DEPRECATED shim: `run_packed` with the `votes` specs."""
+        _warn_legacy("votes_packed")
+        if key is None:
+            return self.run_packed(x_packed, InferenceSpec())
+        return self.run_packed(x_packed, InferenceSpec(noise="batch"),
+                               key=key)
+
+    def votes_mc(self, x_pm1: jax.Array, key: jax.Array,
+                 n_samples: int) -> jax.Array:
+        """DEPRECATED shim: `InferenceSpec(noise="batch", mc_samples=S)`
+        -> [S, B, C] Monte-Carlo silicon votes (HD computed ONCE)."""
+        _warn_legacy("votes_mc")
+        return self.run(
+            x_pm1,
+            InferenceSpec(noise="batch", mc_samples=int(n_samples)),
+            key=key,
+        )
+
+    def votes_each(self, x_pm1: jax.Array, keys: jax.Array) -> jax.Array:
+        """DEPRECATED shim: `InferenceSpec(noise="per_request")` — one
+        batch_shape=() draw per row; invariant to batch composition (the
+        serving determinism contract; see repro/spec.py)."""
+        _warn_legacy("votes_each")
+        return self.run(x_pm1, InferenceSpec(noise="per_request"),
+                        keys=keys)
 
     def votes_mc_each(self, x_pm1: jax.Array, keys: jax.Array,
                       n_samples: int) -> jax.Array:
-        """Per-request Monte-Carlo votes: [n_samples, B, C] int32.
-
-        `votes_mc` with per-request PRNG keys: request i's sample s is
-        drawn from split(keys[i], n_samples)[s] with a per-request
-        (`batch_shape=()`) draw, so — like `votes_each`, and unlike
-        `votes_mc`'s one shared batch-shaped draw — results are invariant
-        to how requests are batched.  The Hamming distances are still
-        computed ONCE for the whole batch across all samples.
-        Identity: votes_mc_each(x, keys, S)[s, i] ==
-        votes_each(x[i:i+1], split(keys[i], S)[s:s+1])[0] (tested).
-        """
-        self._require_physics("votes_mc_each")
-        x_packed, b = self._bucketed(self._pack_input(x_pm1))
-        keys = self._each_keys(keys, b, x_packed.shape[0])
-        out = self._votes_mc_each_packed(x_packed, keys, int(n_samples))
-        return out if out.shape[1] == b else out[:, :b]
+        """DEPRECATED shim: `InferenceSpec(noise="per_request",
+        mc_samples=S)` -> [S, B, C]; sample s of request i is drawn from
+        split(keys[i], S)[s], so results are batching-invariant."""
+        _warn_legacy("votes_mc_each")
+        return self.run(
+            x_pm1,
+            InferenceSpec(noise="per_request", mc_samples=int(n_samples)),
+            keys=keys,
+        )
 
     def votes_mc_each_sum(self, x_pm1: jax.Array, keys: jax.Array,
                           n_samples: int) -> jax.Array:
-        """votes_mc_each summed over samples, [B, C] int32 — the MC
-        serving aggregate, with the reduction fused into the jitted
-        program (an eager .sum(0) per dispatch would compile mid-traffic
-        and cost a host dispatch on the serving hot path)."""
-        self._require_physics("votes_mc_each_sum")
-        x_packed, b = self._bucketed(self._pack_input(x_pm1))
-        keys = self._each_keys(keys, b, x_packed.shape[0])
-        return self._trim(
-            self._votes_mc_each_sum_packed(x_packed, keys, int(n_samples)),
-            b,
+        """DEPRECATED shim: the per-request MC spec with
+        reduction="sum" — the MC serving aggregate, reduction fused into
+        the compiled program."""
+        _warn_legacy("votes_mc_each_sum")
+        return self.run(
+            x_pm1,
+            InferenceSpec(noise="per_request", mc_samples=int(n_samples),
+                          reduction="sum"),
+            keys=keys,
         )
 
     def predict_each(self, x_pm1: jax.Array, keys: jax.Array) -> jax.Array:
-        """Per-request-key Algorithm 1 prediction (argmax of votes_each)."""
-        return jnp.argmax(self.votes_each(x_pm1, keys), axis=-1)
+        """DEPRECATED shim: `InferenceSpec(noise="per_request",
+        reduction="argmax")` — per-request-key Algorithm 1 prediction."""
+        _warn_legacy("predict_each")
+        return self.run(
+            x_pm1,
+            InferenceSpec(noise="per_request", reduction="argmax"),
+            keys=keys,
+        )
 
     def cum_votes(self, x_pm1: jax.Array,
                   key: Optional[jax.Array] = None) -> jax.Array:
-        """Per-pass cumulative votes [P, B, C] under one noise draw.
+        """DEPRECATED shim: per-pass cumulative votes [P, B, C].
 
-        The silicon-conditioned replacement for
-        `ensemble.sweep_from_votes` (which is valid ONLY noiseless):
-        per-pass match indicators are materialized from the sampled
-        thresholds and cumsum'd, at fused speed.  key=None is allowed
-        only on a NOISELESS-compiled pipeline (where it gives the exact
-        staircase, == sweep_from_votes of the fused total); a noisy
-        pipeline must be given a key explicitly.
+        key given  -> `InferenceSpec(noise="batch", cumulative=True)`:
+            one silicon realization's staircase (the silicon-conditioned
+            replacement for `ensemble.sweep_from_votes`, which is valid
+            ONLY noiseless).
+        key=None   -> `InferenceSpec(cumulative=True)`: the exact
+            noiseless staircase (== sweep_from_votes of the fused
+            total).  This used to silently substitute `PRNGKey(0)`; it
+            is now an explicit deterministic spec, valid on any
+            pipeline.  A noise-compiled pipeline must still be given a
+            key explicitly — each call is one silicon realization.
         """
-        phys = self._require_physics("cum_votes")
-        x_packed, b = self._bucketed(self._pack_input(x_pm1))
+        _warn_legacy("cum_votes")
         if key is None:
-            if not phys.is_noiseless:
+            if self.physics is not None and not self.physics.is_noiseless:
                 raise ValueError(
                     "cum_votes on a noise-compiled pipeline needs an "
-                    "explicit key (each call is one silicon realization)"
+                    "explicit key (each call is one silicon realization); "
+                    "for the deterministic staircase run the explicit "
+                    'spec InferenceSpec(noise="off", cumulative=True) on '
+                    "a noiseless pipeline"
                 )
-            key = jax.random.PRNGKey(0)  # ignored by the NOISELESS sampler
-        out = self._cum_votes_packed(x_packed, key)
-        return out if out.shape[1] == b else out[:, :b]
+            return self.run(x_pm1, InferenceSpec(cumulative=True))
+        return self.run(x_pm1, InferenceSpec(noise="batch", cumulative=True),
+                        key=key)
 
     def predict(self, x_pm1: jax.Array,
                 key: Optional[jax.Array] = None) -> jax.Array:
-        """Algorithm 1 prediction: per-class majority vote -> argmax."""
-        return jnp.argmax(self.votes(x_pm1, key), axis=-1)
+        """DEPRECATED shim: `InferenceSpec(reduction="argmax")` —
+        Algorithm 1 prediction (per-class majority vote -> argmax)."""
+        _warn_legacy("predict")
+        if key is None:
+            return self.run(x_pm1, InferenceSpec(reduction="argmax"))
+        return self.run(
+            x_pm1, InferenceSpec(noise="batch", reduction="argmax"), key=key
+        )
 
     def __call__(self, x_pm1: jax.Array,
                  key: Optional[jax.Array] = None) -> jax.Array:
+        """Sugar for the deprecated `predict` shim."""
         return self.predict(x_pm1, key)
 
 
@@ -444,30 +606,33 @@ def compile_pipeline(
               for conv graphs (the conv kernel's per-tap XOR temporary
               scales the VMEM working set ~4x — DESIGN.md §10 derives
               both budgets).
-    noise   : optional NoiseModel — compiles the silicon-mode twins
-              (votes(key=), votes_mc, cum_votes, and the per-request-key
-              votes_each / votes_mc_each serving entries) with a
-              SearchPhysics bundle built from the head's threshold
-              schedule; `params` optionally overrides the AnalogParams.
-              noise=None keeps the pipeline noiseless-only (no
-              knob-schedule work at compile time).
+    noise   : optional NoiseModel — enables the silicon-mode specs
+              (noise="batch"/"per_request", Monte-Carlo, noisy
+              cumulative) by building a SearchPhysics bundle from the
+              head's threshold schedule; `params` optionally overrides
+              the AnalogParams.  noise=None keeps the pipeline
+              noiseless-only (no knob-schedule work at compile time).
     max_bucket : optional cap on the batch-bucket grid (see next_bucket);
               serving loops set it to their max batch so warmup() closes
               the compiled-variant set.
-    donate  : donate the packed input buffer to the jitted XLA-twin
-              entry points (donate_argnums) — the packing step produces
-              a fresh buffer per call, so a serving loop can hand it to
-              the program and save an allocation on TPU/GPU.  No effect
-              on results; backends that can't reuse the buffer (CPU)
-              just ignore the donation.  Off by default because
-              `votes_packed` is public API and donation invalidates the
-              caller's array.
+    donate  : donate the packed input buffer to the compiled programs
+              (donate_argnums) — the packing step produces a fresh
+              buffer per call, so a serving loop can hand it to the
+              program and save an allocation on TPU/GPU.  No effect on
+              results; backends that can't reuse the buffer (CPU) just
+              ignore the donation.  Off by default because `run_packed`
+              is public API and donation invalidates the caller's array.
     image_side : REQUIRED for conv graphs — square input image side
               (`n_in = image_side**2` raw pixels).  Rejected for pure
               MLP graphs.
     image_encoding : the binary input layer for conv graphs
               (`binarize.InputEncoding`); its width must equal the first
               conv layer's c_in.  Default: thermometer of that width.
+
+    The returned pipeline compiles lazily: `run(x, spec)` builds one
+    fused program per distinct `InferenceSpec` on first use (warmup()
+    precompiles a chosen set).  `repro.deploy.deploy(...)` wraps this
+    call in a persistable `Deployment` artifact.
     """
     ens_cfg = ens_cfg or EnsembleConfig()
     if len(folded) < 1:
@@ -568,12 +733,12 @@ def compile_pipeline(
     if noise is not None:
         phys = SearchPhysics.for_head(head, noise, params)
 
-    # donation-friendly entry points: the packed input is the only
-    # per-call buffer worth donating (weights live in the closure)
+    # donation-friendly programs: the packed input is the only per-call
+    # buffer worth donating (weights live in the closures)
     donate_kw = {"donate_argnums": (0,)} if donate else {}
 
     # chunk-padded operands for the XLA-twin math (also backs the
-    # Monte-Carlo / cumulative paths of a pallas-impl pipeline)
+    # Monte-Carlo / cumulative / per-request paths of a pallas pipeline)
     ws = tuple(fused_mlp._pad_words(w, chunk) for w in layer_ws)
     hr = fused_mlp._pad_words(head_rows, chunk)
 
@@ -600,125 +765,129 @@ def compile_pipeline(
             q, ws, layer_cs, layer_n_bits, hr, head.bias_cells
         )
 
+    # the two kernel-eligible vote producers (single [B, C] result block)
     if impl == "pallas" and conv_layers:
-        def votes_packed_fn(x_packed):
+        def _kernel_votes(x_packed, thr_samples=None):
             return fused_conv.fused_conv_votes(
                 x_packed.reshape(-1, image_side, image_side, cw0),
                 conv_ws, conv_cs, conv_metas,
                 layer_ws, layer_cs, layer_n_bits, head_rows, thresholds,
                 bias_cells=head.bias_cells, bq=bq, chunk=chunk,
                 interpret=interpret, head_direct=head_direct,
-            )
-
-        @functools.partial(jax.jit, **donate_kw)
-        def votes_noisy_packed_fn(x_packed, key):
-            t = phys.sample(
-                key, batch_shape=(x_packed.shape[0],), n_rows=n_classes
-            )  # [P, B, C]
-            return fused_conv.fused_conv_votes(
-                x_packed.reshape(-1, image_side, image_side, cw0),
-                conv_ws, conv_cs, conv_metas,
-                layer_ws, layer_cs, layer_n_bits, head_rows, thresholds,
-                bias_cells=head.bias_cells, bq=bq, chunk=chunk,
-                interpret=interpret, head_direct=head_direct,
-                thr_samples=jnp.moveaxis(t, 0, -1),  # [B, C, P] operand
+                thr_samples=thr_samples,
             )
     elif impl == "pallas":
-        def votes_packed_fn(x_packed):
+        def _kernel_votes(x_packed, thr_samples=None):
             return fused_mlp.fused_mlp_votes(
                 x_packed, layer_ws, layer_cs, layer_n_bits,
                 head_rows, thresholds,
                 bias_cells=head.bias_cells, bq=bq, chunk=chunk,
-                interpret=interpret,
+                interpret=interpret, thr_samples=thr_samples,
             )
+    else:
+        _kernel_votes = None
 
-        @functools.partial(jax.jit, **donate_kw)
-        def votes_noisy_packed_fn(x_packed, key):
+    def _votes_off(x_packed):
+        if _kernel_votes is not None:
+            return _kernel_votes(x_packed)
+        hd = _hd_xla(x_packed)
+        return (hd[:, :, None] <= thresholds[None, None, :]).astype(
+            jnp.int32
+        ).sum(-1)
+
+    def _votes_batch(x_packed, key):
+        # one batch-shaped draw: sampled [P, B, C] thresholds against the
+        # single HD computation
+        if _kernel_votes is not None:
             t = phys.sample(
                 key, batch_shape=(x_packed.shape[0],), n_rows=n_classes
             )  # [P, B, C]
-            return fused_mlp.fused_mlp_votes(
-                x_packed, layer_ws, layer_cs, layer_n_bits,
-                head_rows, thresholds,
-                bias_cells=head.bias_cells, bq=bq, chunk=chunk,
-                interpret=interpret,
-                thr_samples=jnp.moveaxis(t, 0, -1),  # [B, C, P] operand
+            return _kernel_votes(
+                x_packed, thr_samples=jnp.moveaxis(t, 0, -1)  # [B, C, P]
             )
-    else:
-        @functools.partial(jax.jit, **donate_kw)
-        def votes_packed_fn(x_packed):
-            hd = _hd_xla(x_packed)
-            return (hd[:, :, None] <= thresholds[None, None, :]).astype(
-                jnp.int32
-            ).sum(-1)
+        hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C]
+        t = phys.sample(key, batch_shape=(hd.shape[0],), n_rows=n_classes)
+        return (hd[None] <= t).astype(jnp.int32).sum(0)
 
-        @functools.partial(jax.jit, **donate_kw)
-        def votes_noisy_packed_fn(x_packed, key):
-            hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C]
-            t = phys.sample(
-                key, batch_shape=(hd.shape[0],), n_rows=n_classes
-            )  # [P, B, C]
-            return (hd[None] <= t).astype(jnp.int32).sum(0)
+    # per-request draw: batch_shape=() per row — each row's realization
+    # depends only on (x_i, keys_i), never on batch composition or bucket
+    # padding (the serve determinism contract)
+    def _votes_one(hd_i, k):
+        t = phys.sample(k, (), n_classes)  # [P, C]
+        return (hd_i[None] <= t).astype(jnp.int32).sum(0)
 
-    votes_mc_packed_fn = cum_votes_packed_fn = None
-    votes_each_packed_fn = votes_mc_each_packed_fn = None
-    votes_mc_each_sum_packed_fn = None
-    if phys is not None:
-        @functools.partial(jax.jit, static_argnames=("n_samples",),
-                           **donate_kw)
-        def votes_mc_packed_fn(x_packed, key, n_samples: int):
-            hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C] — ONCE
+    def make_program(spec: InferenceSpec) -> Callable:
+        """Build the fused program for one spec (jitted; signature per
+        the spec's noise axis — see CompiledPipeline.program)."""
+        mc = spec.mc_samples
 
-            def one(k):
-                t = phys.sample(k, (hd.shape[0],), n_classes)  # [P, B, C]
-                return (hd[None] <= t).astype(jnp.int32).sum(0)
+        if spec.cumulative:
+            if spec.noise == "off":
+                def fn(x_packed):
+                    # the exact staircase: per-pass match indicators of
+                    # the deterministic compare, cumsum'd over passes
+                    hd = _hd_xla(x_packed)
+                    per = (hd[None, :, :] <= thresholds[:, None, None])
+                    return jnp.cumsum(per.astype(jnp.int32), axis=0)
+            else:  # "batch"
+                def fn(x_packed, key):
+                    hd = _hd_xla(x_packed).astype(jnp.float32)
+                    t = phys.sample(key, (hd.shape[0],), n_classes)
+                    return jnp.cumsum((hd[None] <= t).astype(jnp.int32),
+                                      axis=0)
+        elif spec.noise == "off":
+            fn = _votes_off
+        elif spec.noise == "batch":
+            if mc is None:
+                fn = _votes_batch
+            else:
+                def fn(x_packed, key):
+                    hd = _hd_xla(x_packed).astype(jnp.float32)  # ONCE
 
-            return jax.vmap(one)(jax.random.split(key, n_samples))
+                    def one(k):
+                        t = phys.sample(k, (hd.shape[0],), n_classes)
+                        return (hd[None] <= t).astype(jnp.int32).sum(0)
 
-        @functools.partial(jax.jit, **donate_kw)
-        def cum_votes_packed_fn(x_packed, key):
-            hd = _hd_xla(x_packed).astype(jnp.float32)
-            t = phys.sample(key, (hd.shape[0],), n_classes)  # [P, B, C]
-            return jnp.cumsum((hd[None] <= t).astype(jnp.int32), axis=0)
+                    out = jax.vmap(one)(jax.random.split(key, mc))
+                    return out.sum(0) if spec.reduction == "sum" else out
+        else:  # "per_request"
+            if mc is None:
+                def fn(x_packed, keys):
+                    hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C]
+                    return jax.vmap(_votes_one)(hd, keys)
+            elif spec.reduction == "sum":
+                def fn(x_packed, keys):
+                    hd = _hd_xla(x_packed).astype(jnp.float32)
 
-        # per-request-key serving entries: one HD pass for the batch,
-        # then a vmapped per-row draw with batch_shape=() — each row's
-        # realization depends only on (x_i, keys_i), never on batch
-        # composition or bucket padding (the serve determinism contract)
-        def _votes_one(hd_i, k):
-            t = phys.sample(k, (), n_classes)  # [P, C]
-            return (hd_i[None] <= t).astype(jnp.int32).sum(0)
+                    def per_req(hd_i, k):
+                        return jax.vmap(lambda ks: _votes_one(hd_i, ks))(
+                            jax.random.split(k, mc)
+                        ).sum(0)  # [C] — reduction fused into the program
 
-        @functools.partial(jax.jit, **donate_kw)
-        def votes_each_packed_fn(x_packed, keys):
-            hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C]
-            return jax.vmap(_votes_one)(hd, keys)
+                    return jax.vmap(per_req)(hd, keys)  # [B, C]
+            else:
+                def fn(x_packed, keys):
+                    hd = _hd_xla(x_packed).astype(jnp.float32)  # ONCE
 
-        @functools.partial(jax.jit, static_argnames=("n_samples",),
-                           **donate_kw)
-        def votes_mc_each_packed_fn(x_packed, keys, n_samples: int):
-            hd = _hd_xla(x_packed).astype(jnp.float32)  # [B, C] — ONCE
+                    def per_req(hd_i, k):
+                        return jax.vmap(lambda ks: _votes_one(hd_i, ks))(
+                            jax.random.split(k, mc)
+                        )  # [S, C]
 
-            def per_req(hd_i, k):
-                return jax.vmap(lambda ks: _votes_one(hd_i, ks))(
-                    jax.random.split(k, n_samples)
-                )  # [S, C]
+                    return jnp.moveaxis(
+                        jax.vmap(per_req)(hd, keys), 1, 0
+                    )  # [S, B, C] (votes_mc layout)
 
-            return jnp.moveaxis(
-                jax.vmap(per_req)(hd, keys), 1, 0
-            )  # [S, B, C] (votes_mc layout)
+        if spec.reduction == "argmax":
+            base = fn  # single-realization vote producer, [B, C]
+            if spec.noise == "off":
+                def fn(x_packed):
+                    return jnp.argmax(base(x_packed), axis=-1)
+            else:
+                def fn(x_packed, rng):
+                    return jnp.argmax(base(x_packed, rng), axis=-1)
 
-        @functools.partial(jax.jit, static_argnames=("n_samples",),
-                           **donate_kw)
-        def votes_mc_each_sum_packed_fn(x_packed, keys, n_samples: int):
-            hd = _hd_xla(x_packed).astype(jnp.float32)
-
-            def per_req(hd_i, k):
-                return jax.vmap(lambda ks: _votes_one(hd_i, ks))(
-                    jax.random.split(k, n_samples)
-                ).sum(0)  # [C] — reduction fused into the program
-
-            return jax.vmap(per_req)(hd, keys)  # [B, C]
+        return jax.jit(fn, **donate_kw)
 
     if conv_layers:
         n_in = int(image_side) ** 2  # raw [0,1] pixels in, encode inside
@@ -734,14 +903,7 @@ def compile_pipeline(
         min_bucket=min_bucket,
         head_only=not hidden,
         physics=phys,
-        _votes_packed=votes_packed_fn,
-        _votes_noisy_packed=votes_noisy_packed_fn if phys is not None
-        else None,
-        _votes_mc_packed=votes_mc_packed_fn,
-        _cum_votes_packed=cum_votes_packed_fn,
-        _votes_each_packed=votes_each_packed_fn,
-        _votes_mc_each_packed=votes_mc_each_packed_fn,
-        _votes_mc_each_sum_packed=votes_mc_each_sum_packed_fn,
+        _program_factory=make_program,
         _pack_fn=pack_fn,
         max_bucket=max_bucket,
     )

@@ -8,12 +8,20 @@ of single-image requests and turns them into efficiently-bucketed fused
 dispatches.
 
     server = PicBnnServer(BatchingPolicy(max_batch=256, max_wait_us=500))
-    server.register("mnist", pipe, layer_sizes=(784, 128, 10))
+    server.register("mnist", deployment)    # or a CompiledPipeline, or a
+    server.register("hg", "ckpts/hg")       # saved Deployment directory
     server.start()                       # or: with PicBnnServer(...) as s:
     h = server.submit("mnist", image)    # image: [n_in] in the ±1 domain
     res = h.result()                     # .pred, .votes, .latency_ms, ...
     server.close()
     print(server.stats().summary())
+
+Each registered model dispatches through ONE declarative request spec
+(`repro.spec.InferenceSpec`), fixed at registration: noiseless models
+run `InferenceSpec()`, silicon models the per-request-key spec, MC
+models the per-request MC spec with the sum reduction fused in.  The
+dispatch hot path is a single `pipe.run(x, spec, keys=...)` — adding a
+serving mode is a new spec value, not a new pipeline method.
 
 Architecture (DESIGN.md §9):
 
@@ -39,9 +47,9 @@ variants per model per device (`CompiledPipeline.warmup`) and never
 compiles — not even an eager op — mid-traffic.
 
 Determinism contract: noiseless served predictions are bit-exact equal
-to a direct `pipe.predict` on the same images (bucketing is padding-
+to a direct pipeline call on the same images (bucketing is padding-
 invariant); silicon-mode requests carry a per-request PRNG key and are
-served through `pipe.votes_each` / `pipe.votes_mc_each` (per-request
+served through the `noise="per_request"` specs (per-request
 `batch_shape=()` draws), so results are bit-exact reproducible no matter
 how the batcher happens to coalesce the stream — tested on all three
 bank configurations in tests/test_serve_picbnn.py.
@@ -63,13 +71,16 @@ import collections
 import dataclasses
 import threading
 import time
+from pathlib import Path
 from typing import Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core import mapping
+from repro.deploy import Deployment
 from repro.pipeline import CompiledPipeline, next_bucket
+from repro.spec import InferenceSpec
 from repro.serve.scheduler import (
     BatchingPolicy,
     LatencySummary,
@@ -276,7 +287,8 @@ class _Model:
     model_id: str
     pipe: CompiledPipeline
     silicon: bool  # requests must carry a per-request PRNG key
-    mc_samples: int  # 0: one realization (votes_each); S>0: votes_mc_each
+    spec: InferenceSpec  # the ONE spec every dispatch for this model runs
+    #   (mc_samples lives inside the spec — no duplicate state)
     silicon_cost: Optional[mapping.InferenceCost]  # Table-II equivalent
 
 
@@ -385,33 +397,49 @@ class PicBnnServer:
     # ------------------------------------------------------------------
     # registry
     # ------------------------------------------------------------------
-    def register(self, model_id: str, pipe: CompiledPipeline, *,
+    def register(self, model_id: str, model, *,
                  layer_sizes: Optional[Sequence[int]] = None,
                  silicon_cost: Optional[mapping.InferenceCost] = None,
                  mc_samples: int = 0, warmup: bool = False) -> None:
         """Add a model to the registry.
 
-        The pipeline may be any `compile_pipeline` output — MLP (±1
-        activation requests of width `pipe.n_in`) or conv (raw [0,1]
-        pixel requests of width image_side**2); the serving layer only
-        sees [n_in] request rows either way.
+        model : a `CompiledPipeline`, a `deploy.Deployment` (compiled
+            lazily), or a str/Path to a SAVED deployment directory
+            (`Deployment.save` output — servers register models straight
+            from disk).  MLP deployments take ±1 activation requests of
+            width `pipe.n_in`, conv deployments raw [0,1] pixel requests
+            of width image_side**2; the serving layer only sees [n_in]
+            request rows either way.
 
         layer_sizes : optional (n_in, ..., n_classes) of a deployed MLP
             — enables the Table-II silicon-equivalent throughput in
-            stats() via `mapping.model_inference_cost`.
+            stats() via `mapping.model_inference_cost`.  Derived
+            automatically from a pure-MLP Deployment.
         silicon_cost: alternative to layer_sizes for non-MLP graphs —
             a precomputed `mapping.InferenceCost` (e.g.
             `convnet.cnn_inference_cost` for CNN deployments).
         mc_samples  : >0 routes this (silicon) model's requests through
-            `votes_mc_each` and serves the prediction of the summed
-            Monte-Carlo votes; 0 serves one realization per request.
+            the per-request Monte-Carlo spec and serves the prediction
+            of the summed votes; 0 serves one realization per request.
         warmup      : precompile the model's full bucket grid on every
             serving device now (otherwise call .warmup() before traffic).
+
+        The model's dispatch spec is fixed here: every one of its
+        micro-batches executes `pipe.run(x, spec[, keys])` with that one
+        `InferenceSpec` — see `_Model.spec`.
         """
         if self._started:
             raise RuntimeError("register() before start()")
         if model_id in self._models:
             raise ValueError(f"model {model_id!r} already registered")
+        if isinstance(model, (str, Path)):
+            model = Deployment.load(model)
+        if isinstance(model, Deployment):
+            if layer_sizes is None and silicon_cost is None:
+                layer_sizes = model.layer_sizes  # None for conv graphs
+            pipe = model.pipeline()
+        else:
+            pipe = model
         silicon = pipe.physics is not None and not pipe.physics.is_noiseless
         if mc_samples and not silicon:
             raise ValueError("mc_samples needs a silicon-mode pipeline")
@@ -433,34 +461,48 @@ class PicBnnServer:
             cost = mapping.model_inference_cost(
                 plans, int(pipe.head.thresholds.shape[0])
             )
+        if silicon:
+            spec = (InferenceSpec(noise="per_request",
+                                  mc_samples=int(mc_samples),
+                                  reduction="sum")
+                    if mc_samples else InferenceSpec(noise="per_request"))
+        else:
+            spec = InferenceSpec()
         self._models[model_id] = _Model(
             model_id=model_id, pipe=pipe, silicon=silicon,
-            mc_samples=int(mc_samples), silicon_cost=cost,
+            spec=spec, silicon_cost=cost,
         )
         if warmup:
             self._warm_model(self._models[model_id])
 
-    def _warm_model(self, m: _Model) -> None:
-        # warm exactly the entry point dispatch uses — every extra entry
-        # is another XLA compile per bucket per device before traffic —
+    def _warm_model(self, m: _Model) -> dict:
+        # warm exactly the spec dispatch uses — every extra spec is
+        # another XLA compile per bucket per device before traffic —
         # and with the SAME placement dispatch will stage with: jit
         # caches key on input sharding, so warming with a different
         # placement would never be hit and traffic would compile anyway
-        mc = m.mc_samples or None
-        entries = (("votes_mc_each_sum",) if m.mc_samples
-                   else ("votes_each",)) if m.silicon else ("votes",)
+        times: dict = {}
         if self.fanout == "spmd":
-            m.pipe.warmup(self.policy.max_batch, mc_samples=mc,
-                          device=self._batch_sharding, entries=entries)
-            return
+            times.update(m.pipe.warmup(self.policy.max_batch,
+                                       specs=(m.spec,),
+                                       device=self._batch_sharding))
+            return times
         for dev in self.devices:
-            m.pipe.warmup(self.policy.max_batch, mc_samples=mc,
-                          device=dev, entries=entries)
+            for (spec, bucket), s in m.pipe.warmup(
+                self.policy.max_batch, specs=(m.spec,), device=dev
+            ).items():
+                times[(spec, bucket)] = times.get((spec, bucket), 0.0) + s
+        return times
 
-    def warmup(self) -> None:
-        """Precompile every (model, bucket, device) program variant."""
-        for m in self._models.values():
-            self._warm_model(m)
+    def warmup(self) -> dict[str, dict]:
+        """Precompile every (model, bucket, device) program variant.
+
+        Returns {model_id: {(spec, bucket): seconds}} — per-program
+        compile-cost attribution for serving startup (summed across
+        devices for round-robin fan-out).
+        """
+        return {mid: self._warm_model(m)
+                for mid, m in self._models.items()}
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -666,12 +708,9 @@ class PicBnnServer:
         xd = jax.device_put(x, target)
         if m.silicon:
             kd = jax.device_put(keys, target)
-            if m.mc_samples:
-                votes = pipe.votes_mc_each_sum(xd, kd, m.mc_samples)
-            else:
-                votes = pipe.votes_each(xd, kd)
+            votes = pipe.run(xd, m.spec, keys=kd)
         else:
-            votes = pipe.votes(xd)
+            votes = pipe.run(xd, m.spec)
         # jax dispatch is async: `votes` is a device future; hand it to
         # the completion thread and go assemble/stage the next batch
         batch = _Batch(m.model_id, n, bucket, dev_idx, t_dispatch, t_subs)

@@ -137,7 +137,10 @@ def test_next_bucket_guards_and_grid():
 def test_warmup_covers_bucket_grid():
     pipe, sizes = _make_pipe("2048x64", noise=SILICON, max_bucket=32)
     times = pipe.warmup(32, mc_samples=2)
-    assert list(times) == [8, 16, 32]
+    # per-(spec, bucket) attribution: every default spec at every bucket
+    assert sorted({b for _spec, b in times}) == [8, 16, 32]
+    assert {spec for spec, _b in times} == \
+        set(pipe.default_warmup_specs(2))
     assert all(t > 0 for t in times.values())
     # warmed entries run without error at every bucket and ragged sizes
     for b in (1, 8, 9, 32):
